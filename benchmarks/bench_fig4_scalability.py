@@ -1,0 +1,31 @@
+"""Paper Fig. 4: parameter scalability — n sweep (FourierFT) vs r sweep
+(LoRA) at matched budgets; FourierFT should improve monotonically with n."""
+import numpy as np
+
+from repro.configs.base import PEFTConfig
+from benchmarks.common import emit, finetune, tiny
+
+
+def main():
+    cfg = tiny("yi-6b")
+    four_losses = []
+    for n in [16, 64, 256]:
+        r = finetune(cfg, PEFTConfig(method="fourierft", n=n, alpha=10.0,
+                                     train_head=True),
+                     steps=40, lr=3e-2, pretrain_steps=20)
+        four_losses.append(r["final_loss"])
+        emit(f"fig4/fourier_n{n}", r["us_per_step"],
+             f"loss={r['final_loss']:.4f};params={r['trainable']}")
+    for rr in [1, 4, 8]:
+        r = finetune(cfg, PEFTConfig(method="lora", lora_r=rr,
+                                     train_head=True),
+                     steps=40, lr=2e-2, pretrain_steps=20)
+        emit(f"fig4/lora_r{rr}", r["us_per_step"],
+             f"loss={r['final_loss']:.4f};params={r['trainable']}")
+    trend = "improving" if four_losses[-1] <= four_losses[0] else "flat"
+    emit("fig4/fourier_n_trend", 0.0, f"{trend};losses=" +
+         "|".join(f"{l:.3f}" for l in four_losses))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 1: trainable parameters + storage bytes, LoRA vs FourierFT,
+for every base model row. Asserts exact agreement with the paper's counts."""
+import time
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import peft as peft_mod
+from benchmarks.common import emit
+
+# (model, lora_r, fourier_n, paper lora count, paper fourier count)
+TABLE1 = [
+    ("roberta-base", 4, 200, 147_456, 4_800),
+    ("roberta-base", 8, 200, 294_912, 4_800),
+    ("roberta-large", 4, 200, 393_216, 9_600),
+    ("roberta-large", 8, 1000, 786_432, 48_000),
+    ("gpt2-medium", 4, 500, 393_216, 24_000),
+    ("gpt2-medium", 8, 1000, 786_432, 48_000),
+    ("gpt2-large", 4, 500, 737_280, 36_000),
+    ("gpt2-large", 8, 1000, 1_474_560, 72_000),
+    ("llama2-7b", 16, 1000, 8_388_608, 64_000),
+    ("llama2-7b", 64, 2000, 33_554_432, 128_000),
+    ("llama2-13b", 16, 1000, 13_107_200, 80_000),
+    ("llama2-13b", 64, 2000, 52_428_800, 160_000),
+    ("vit-base", 8, 3000, 294_912, 72_000),
+    ("vit-base", 16, 10000, 589_824, 240_000),
+    ("vit-large", 8, 3000, 786_432, 144_000),
+    ("vit-large", 16, 10000, 1_572_864, 480_000),
+]
+
+
+def main():
+    t0 = time.perf_counter()
+    worst_ratio = 0.0
+    for model, r, n, lora_expect, four_expect in TABLE1:
+        cfg = PAPER_MODELS[model]
+        sites = peft_mod.qv_sites_for(cfg)
+        lora = peft_mod.count_trainable(sites, PEFTConfig(method="lora", lora_r=r))
+        four = peft_mod.count_trainable(sites, PEFTConfig(method="fourierft", n=n))
+        lora_b = peft_mod.storage_bytes(sites, PEFTConfig(method="lora", lora_r=r))
+        four_b = peft_mod.storage_bytes(sites, PEFTConfig(method="fourierft", n=n))
+        assert lora == lora_expect, (model, r, lora, lora_expect)
+        assert four == four_expect, (model, n, four, four_expect)
+        worst_ratio = max(worst_ratio, four / lora)
+        emit(f"table1/{model}/lora_r{r}", 0.0,
+             f"params={lora};bytes={lora_b}")
+        emit(f"table1/{model}/fourier_n{n}", 0.0,
+             f"params={four};bytes={four_b};vs_lora={four/lora:.4f}")
+    us = (time.perf_counter() - t0) * 1e6 / len(TABLE1)
+    emit("table1/all_rows_exact", us, f"rows={len(TABLE1)};max_ratio={worst_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 2 proxy (GLUE): FF vs BitFit vs LoRA vs FourierFT on a
+synthetic NLU suite (Markov-LM fine-tune after a task shift). GLUE itself is
+unavailable offline; the claim being reproduced is the ORDERING — FourierFT
+matches/beats LoRA with ~8% of its trainable parameters."""
+from repro.configs.base import PEFTConfig
+from benchmarks.common import emit, finetune, tiny
+
+
+def main():
+    cfg = tiny("yi-6b")
+    methods = [
+        ("ff", PEFTConfig(method="full"), 3e-3),
+        ("bitfit", PEFTConfig(method="bitfit", train_head=True), 2e-2),
+        ("lora_r8", PEFTConfig(method="lora", lora_r=8, train_head=True), 2e-2),
+        ("fourier_n100", PEFTConfig(method="fourierft", n=100, alpha=10.0,
+                                    train_head=True), 3e-2),
+    ]
+    results = {}
+    for name, peft, lr in methods:
+        r = finetune(cfg, peft, steps=50, lr=lr, pretrain_steps=30)
+        results[name] = r
+        emit(f"table2/{name}", r["us_per_step"],
+             f"loss={r['final_loss']:.4f};trainable={r['trainable']}")
+    # ordering claim: fourier within 5% of lora's loss at ~6-8% of params
+    four, lora = results["fourier_n100"], results["lora_r8"]
+    ok = four["final_loss"] <= lora["final_loss"] * 1.05
+    ratio = four["trainable"] / max(lora["trainable"], 1)
+    emit("table2/claim_fourier_matches_lora", 0.0,
+         f"holds={ok};param_ratio={ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 3 proxy (E2E NLG, GPT-2 M/L): generation fine-tune measured by
+final LM loss on a GPT-2-shaped reduced config; FourierFT at ~10-14% of LoRA's
+parameter count."""
+from repro.configs.base import PEFTConfig
+import repro.configs as C
+from benchmarks.common import emit, finetune
+
+
+def main():
+    # gpt2-medium-shaped reduced config (non-gated GELU mlp, MHA)
+    cfg = C.reduced(C.PAPER_MODELS["gpt2-medium"]).replace(vocab=64)
+    for name, peft, lr in [
+        ("lora_r4", PEFTConfig(method="lora", lora_r=4, train_head=True), 2e-2),
+        ("fourier_n128", PEFTConfig(method="fourierft", n=128, alpha=10.0,
+                                    train_head=True), 3e-2),
+    ]:
+        r = finetune(cfg, peft, steps=50, lr=lr, pretrain_steps=30,
+                     task_seed=9)
+        emit(f"table3/{name}", r["us_per_step"],
+             f"loss={r['final_loss']:.4f};trainable={r['trainable']}")
+
+
+if __name__ == "__main__":
+    main()

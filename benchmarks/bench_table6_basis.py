@@ -1,0 +1,72 @@
+"""Paper Table 6: basis expressiveness — Fourier vs random vs orthogonal
+bases at equal parameter count (matrix-recovery + fine-tune ordering)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PEFTConfig
+from benchmarks.common import emit, finetune, tiny
+
+
+def matrix_recovery(basis: str, d1=64, d2=64, n=48, steps=400):
+    """Recover a structured target ΔW* (smooth low-frequency field + low-rank
+    bump — the kind of spectral concentration real weight deltas show) from n
+    coefficients by GD. A rank-k random target is information-theoretically
+    unrecoverable from n ≪ d² random basis functions (any basis captures
+    ≈ √(n/d²) of its energy), so structure is what separates the bases —
+    the paper's premise (§1, compression literature)."""
+    from repro.core import basis as basis_mod
+    from repro.core import fourierft
+    key = jax.random.PRNGKey(0)
+    # smooth field: superposition of low-frequency cosines
+    jj = jnp.arange(d1)[:, None]
+    kk = jnp.arange(d2)[None, :]
+    freqs = [(1, 2, 1.0), (3, 1, 0.7), (2, 5, 0.5), (0, 3, 0.6), (4, 4, 0.4)]
+    target = sum(a * jnp.cos(2 * jnp.pi * (fu * jj / d1 + fv * kk / d2))
+                 for fu, fv, a in freqs)
+    u = jax.random.normal(key, (d1, 2))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (2, d2))
+    target = target + 0.15 * (u @ v)
+    if basis == "fourier":
+        # low-frequency entry bias (paper Eq. 5): the spectral parameterization
+        # can be TARGETED at the structure, which no random/orthogonal basis
+        # supports — this is the expressiveness asymmetry Table 6 reports.
+        E = fourierft.sample_entries(d1, d2, n, seed=2024, freq_bias=True,
+                                     fc=0.0, bandwidth=8.0, centered=False)
+        mat = lambda c: fourierft.materialize_delta(c, E, d1, d2, float(d1 * d2))
+    else:
+        b1, b2 = basis_mod.make_basis(jax.random.fold_in(key, 2), basis,
+                                      d1, d2, n)
+        mat = lambda c: basis_mod.materialize_delta_basis(
+            c, b1, b2, basis, float(d1 * d2) if basis == "random"
+            else 2.0 * (d1 * d2) ** 0.5)
+    c = jnp.zeros(n)
+    lossf = jax.jit(lambda c: jnp.mean((mat(c) - target) ** 2))
+    g = jax.jit(jax.grad(lossf))
+    lr = 0.5
+    for _ in range(steps):
+        c = c - lr * g(c)
+    rel = float(jnp.linalg.norm(mat(c) - target) / jnp.linalg.norm(target))
+    return rel
+
+
+def main():
+    recs = {}
+    for basis in ["fourier", "orthogonal", "random"]:
+        rel = matrix_recovery(basis)
+        recs[basis] = rel
+        emit(f"table6/recovery_{basis}", 0.0, f"rel_err={rel:.4f}")
+    # fine-tune ordering at equal params
+    cfg = tiny("yi-6b")
+    for basis in ["fourier", "orthogonal", "random"]:
+        # square wq site only: the orthogonal ablation needs n <= min(d1,d2)
+        r = finetune(cfg, PEFTConfig(method="fourierft", n=48, alpha=10.0,
+                                     basis=basis, strategy="merged",
+                                     target_modules=("wq",), train_head=True),
+                     steps=40, lr=3e-2, pretrain_steps=20)
+        emit(f"table6/finetune_{basis}", r["us_per_step"],
+             f"loss={r['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

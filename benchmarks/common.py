@@ -1,0 +1,71 @@
+"""Shared benchmark harness: tiny-model fine-tuning runner used by the
+paper-table proxies. Prints `name,us_per_call,derived` CSV rows via emit()."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import ModelConfig, PEFTConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.train import step as ts
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def finetune(cfg: ModelConfig, peft: PEFTConfig, *, steps: int = 60,
+             lr: float = 2e-2, batch: int = 8, seq: int = 32,
+             pretrain_steps: int = 0, seed: int = 0,
+             task_seed: int = 7) -> Dict:
+    """Pre-train (optionally) on task A with full FT, then fine-tune with
+    `peft` on task B. Returns losses + eval perplexity + wall time."""
+    model = build(cfg, peft)
+    tcfg = TrainConfig(learning_rate=lr, total_steps=steps,
+                       warmup_steps=max(2, steps // 10), seed=seed)
+    state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(seed))
+    if pretrain_steps:
+        base_model = build(cfg, PEFTConfig(method="full"))
+        btcfg = TrainConfig(learning_rate=3e-3, total_steps=pretrain_steps,
+                            warmup_steps=5)
+        bstate, bfrozen = ts.init_state(base_model, btcfg,
+                                        jax.random.PRNGKey(seed))
+        bstep = jax.jit(ts.make_train_step(base_model, btcfg))
+        pre_data = SyntheticLM(vocab=cfg.vocab, batch=batch, seq=seq,
+                               seed=seed, task_seed=1)
+        for i in range(pretrain_steps):
+            bstate, _ = bstep(bstate, bfrozen, pre_data.batch_at(i))
+        frozen = {"base": bstate["trainable"]["base"], "peft": frozen["peft"]}
+
+    step_fn = jax.jit(ts.make_train_step(model, tcfg))
+    data = SyntheticLM(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed + 1,
+                       task_seed=task_seed)
+    b0 = data.batch_at(0)
+    state, _ = step_fn(state, frozen, b0)  # compile
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(1, steps):
+        state, m = step_fn(state, frozen, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    wall = time.perf_counter() - t0
+    eval_loss = float(np.mean(losses[-5:]))
+    return {
+        "losses": losses,
+        "final_loss": eval_loss,
+        "us_per_step": wall / max(len(losses), 1) * 1e6,
+        "trainable": model.trainable_params(),
+    }
+
+
+def tiny(arch: str = "yi-6b", vocab: int = 64, **kw) -> ModelConfig:
+    return C.reduced(C.get(arch)).replace(vocab=vocab, **kw)

@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure (+ systems benches).
+Prints ``name,us_per_call,derived`` CSV. `python -m benchmarks.run [--only X]`.
+"""
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_table1_params",
+    "benchmarks.bench_table2_glue_proxy",
+    "benchmarks.bench_table3_e2e_proxy",
+    "benchmarks.bench_table4_instruct_proxy",
+    "benchmarks.bench_table5_vision_proxy",
+    "benchmarks.bench_table6_basis",
+    "benchmarks.bench_fig4_scalability",
+    "benchmarks.bench_fig5_freq_bias",
+    "benchmarks.bench_fig6_curve",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_grad_comm",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            importlib.import_module(mod_name).main()
+            print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
+                  flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Paper Appendix C.2 (Figure 7), reproduced end-to-end: 8-class 2-D
+Gaussian-blob classification through a single 64x64 hidden layer, adapting it
+with LoRA r=1 vs FourierFT n=128 — EQUAL trainable parameter count (128).
+
+The paper's claim: LoRA r=1 hits an expressiveness bottleneck (never reaches
+100% within 2000 epochs) while FourierFT reaches 100% quickly.
+
+    PYTHONPATH=src python examples/expressiveness_2d.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fourierft, lora
+from repro.data import SyntheticClassification
+
+
+D = 64
+
+
+def make_base(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": jax.random.normal(ks[0], (2, D)) * 0.5,
+        "b_in": jnp.zeros(D),
+        "w_hid": jax.random.normal(ks[1], (D, D)) * 0.2,   # the adapted layer
+        "b_hid": jnp.zeros(D),
+        "w_out": jax.random.normal(ks[2], (D, 8)) * 0.3,
+        "b_out": jnp.zeros(8),
+    }
+
+
+def forward(base, delta_fn, x):
+    h = jax.nn.relu(x @ base["w_in"] + base["b_in"])
+    h = jax.nn.relu(h @ (base["w_hid"] + delta_fn()) + base["b_hid"])
+    return h @ base["w_out"] + base["b_out"]
+
+
+def train(method: str, epochs: int = 2000, lr: float = 0.1, seed: int = 0):
+    x, y = SyntheticClassification(num_classes=8, dim=2, noise=0.22,
+                                   seed=3).dataset(64)
+    base = make_base(jax.random.PRNGKey(seed))
+    if method == "fourierft":
+        entries = fourierft.sample_entries(D, D, 128, seed=2024)
+        train_p = {"c": jnp.zeros(128)}
+        delta = lambda p: fourierft.materialize_delta(
+            p["c"], entries, D, D, alpha=float(D * D))
+    else:  # lora r=1 -> 2*64 = 128 params, equal budget
+        train_p = lora.init_lora(jax.random.PRNGKey(seed + 1), D, D, 1)
+        delta = lambda p: lora.lora_delta(p["lora_a"], p["lora_b"], 2.0, 1)
+
+    def loss_fn(p):
+        logits = forward(base, lambda: delta(p), x)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                 * jax.nn.one_hot(y, 8), -1))
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), l
+
+    @jax.jit
+    def acc_fn(p):
+        return (jnp.argmax(forward(base, lambda: delta(p), x), -1) == y).mean()
+
+    hist = []
+    first_100 = None
+    for e in range(epochs):
+        train_p, l = step(train_p)
+        if e % 50 == 0 or e == epochs - 1:
+            acc = float(acc_fn(train_p))
+            hist.append((e, float(l), acc))
+            if first_100 is None and acc >= 0.999:
+                first_100 = e
+    n_params = sum(int(np.prod(v.shape)) for v in jax.tree.leaves(train_p))
+    return hist, first_100, n_params
+
+
+def main():
+    for method in ["lora", "fourierft"]:
+        hist, first_100, n_params = train(method)
+        final = hist[-1]
+        print(f"\n== {method} ({n_params} trainable params) ==")
+        for e, l, a in hist[::4] + [final]:
+            print(f"  epoch {e:5d}  loss {l:.4f}  acc {a:.3f}")
+        print(f"  reached 100% at epoch: {first_100}")
+    print("\nPaper claim (App. C.2): FourierFT overcomes the equal-budget "
+          "LoRA bottleneck — compare the two 'reached 100%' lines above.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: fine-tune a small decoder LM with FourierFT in ~30 lines of
+public API, then merge the adapter for zero-latency serving.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+import repro.configs as configs
+from repro.configs.base import PEFTConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.serve import Engine
+from repro.train import loop, step as train_step
+
+
+def main():
+    # 1. pick an architecture config (any of the 10 registered archs works;
+    #    `reduced` shrinks it to laptop scale for this demo)
+    cfg = configs.reduced(configs.get("yi-6b"), layers=4, width=128).replace(
+        vocab=256)
+
+    # 2. attach the paper's technique: n spectral coefficients per q/v matrix
+    peft = PEFTConfig(method="fourierft", n=128, alpha=20.0, train_head=True)
+    model = build(cfg, peft)
+    print(f"arch={cfg.name}  trainable params={model.trainable_params():,} "
+          f"(vs {sum(x.size for x in jax.tree.leaves(model.init(jax.random.PRNGKey(0))['base'])):,} frozen)")
+
+    # 3. train with the fault-tolerant loop (async checkpoints, anomaly guard)
+    tcfg = TrainConfig(learning_rate=5e-2, total_steps=200, warmup_steps=10)
+    state, frozen = train_step.init_state(model, tcfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(train_step.make_train_step(model, tcfg))
+    data = SyntheticLM(vocab=cfg.vocab, batch=16, seq=64, task_seed=5)
+    # (markov teacher => loss floor ~= teacher entropy; adapters+head close
+    #  most of the gap from the random-base starting point)
+    state, report = loop.run(step_fn, state, frozen, data, tcfg,
+                             ckpt_dir="/tmp/repro_quickstart", ckpt_every=50)
+    print(f"loss {report.losses[0]:.3f} -> {report.final_loss:.3f} "
+          f"({report.steps_run} steps, {report.anomalies} anomalies)")
+
+    # 4. merge ΔW into the base weights and serve (paper §3.1: no latency)
+    params = train_step.join_params(model, state["trainable"], frozen)
+    engine = Engine(model, params, batch_slots=2, max_len=96)
+    outs = engine.generate([jax.numpy.arange(8, dtype=jax.numpy.int32),
+                            jax.numpy.arange(4, dtype=jax.numpy.int32)],
+                           max_new=12)
+    print("generated:", [o.tolist() for o in outs])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving example (deliverable b): merged-adapter batched decoding.
+
+Loads (or trains) FourierFT adapters for a small LM, merges ΔW into the base
+weights (zero added inference latency — paper §3.1), and serves a batch of
+prompts with greedy decoding through the slot-based engine. Also demonstrates
+that many adapters can be stored cheaply and hot-swapped: three "customers"
+fine-tuned on different tasks share one base model.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import PEFTConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.serve import Engine, merge_for_serving
+from repro.train import step as train_step
+
+
+def train_adapter(model, frozen, task_seed: int, steps: int = 40):
+    tcfg = TrainConfig(learning_rate=2e-2, total_steps=steps, warmup_steps=4)
+    state, f0 = train_step.init_state(model, tcfg, jax.random.PRNGKey(task_seed))
+    frozen = {"base": frozen["base"], "peft": f0["peft"]}
+    step_fn = jax.jit(train_step.make_train_step(model, tcfg))
+    data = SyntheticLM(vocab=model.cfg.vocab, batch=8, seq=32,
+                      task_seed=task_seed)
+    for i in range(steps):
+        state, m = step_fn(state, frozen, data.batch_at(i))
+    return state["trainable"]["peft"], float(m["loss"])
+
+
+def main():
+    cfg = configs.reduced(configs.get("yi-6b"), layers=4, width=128).replace(
+        vocab=256)
+    peft = PEFTConfig(method="fourierft", n=64, alpha=20.0)
+    model = build(cfg, peft)
+    params0 = model.init(jax.random.PRNGKey(0))
+    frozen = {"base": params0["base"], "peft": {}}
+
+    # three customers, three adapters — each ~64*L*2 floats of storage
+    adapters = {}
+    for task in (11, 22, 33):
+        ad, loss = train_adapter(model, frozen, task)
+        n_bytes = sum(v.size * 4 for d in ad.values() for k, v in d.items()
+                      if k == "c")
+        adapters[task] = ad
+        print(f"adapter for task {task}: final loss {loss:.3f}, "
+              f"{n_bytes/1024:.1f} KiB checkpoint")
+
+    prompts = [jnp.arange(6, dtype=jnp.int32),
+               jnp.arange(3, dtype=jnp.int32) + 7,
+               jnp.array([1, 2, 3, 5, 8, 13], jnp.int32)]
+    for task, ad in adapters.items():
+        params = {"base": params0["base"], "peft": ad}
+        t0 = time.perf_counter()
+        engine = Engine(model, params, batch_slots=len(prompts), max_len=64)
+        outs = engine.generate(prompts, max_new=8)
+        dt = time.perf_counter() - t0
+        print(f"task {task}: served {len(prompts)} prompts in {dt:.2f}s "
+              f"(merged; per-token graph identical to the base model)")
+        for i, o in enumerate(outs):
+            print(f"  prompt {i}: {o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

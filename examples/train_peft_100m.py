@@ -1,0 +1,98 @@
+"""End-to-end driver (deliverable b): instruction-tuning-style fine-tune of a
+~100M-parameter LLaMA-shaped decoder with FourierFT — the paper's Table 4
+setting at laptop scale. Pre-trains the base on task A, fine-tunes adapters
+on task B, with checkpointing/resume and a LoRA comparison at the paper's
+parameter ratio.
+
+    PYTHONPATH=src python examples/train_peft_100m.py --steps 200
+(defaults to a quick 40-step run; --steps 300+ reproduces the full curves)
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.configs.base import ModelConfig, PEFTConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.train import loop, step as train_step
+
+# ~100M params: 12L, d=768, llama-style (gated mlp, GQA 12/4)
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense", num_layers=12, d_model=768,
+    n_heads=12, n_kv=4, head_dim=64, d_ff=2048, vocab=8192,
+)
+
+
+def run(method: str, steps: int, pretrained_base, data):
+    peft = (PEFTConfig(method="fourierft", n=256, alpha=16.0)
+            if method == "fourierft"
+            else PEFTConfig(method="lora", lora_r=8, lora_alpha=16.0))
+    model = build(CFG_100M, peft)
+    tcfg = TrainConfig(learning_rate=3e-3 if method == "lora" else 1e-2,
+                       total_steps=steps, warmup_steps=max(steps // 10, 2))
+    state, frozen = train_step.init_state(model, tcfg, jax.random.PRNGKey(1))
+    frozen = {"base": pretrained_base, "peft": frozen["peft"]}
+    step_fn = jax.jit(train_step.make_train_step(model, tcfg))
+    t0 = time.time()
+    state, report = loop.run(
+        step_fn, state, frozen, data, tcfg,
+        ckpt_dir=f"/tmp/repro_100m_{method}", ckpt_every=max(steps // 2, 10),
+        log_every=max(steps // 8, 1))
+    return {
+        "trainable": model.trainable_params(),
+        "first": report.losses[0], "final": report.final_loss,
+        "wall_s": time.time() - t0, "anomalies": report.anomalies,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--pretrain-steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    n_base = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
+        jax.eval_shape(lambda: build(CFG_100M, PEFTConfig(method="none"))
+                       .init(jax.random.PRNGKey(0)))["base"]))
+    print(f"base model: {n_base/1e6:.1f}M params")
+
+    # pre-train the base briefly on the "pretraining" task
+    base_model = build(CFG_100M, PEFTConfig(method="full"))
+    btcfg = TrainConfig(learning_rate=3e-3, total_steps=args.pretrain_steps,
+                        warmup_steps=5)
+    bstate, bfrozen = train_step.init_state(base_model, btcfg,
+                                            jax.random.PRNGKey(0))
+    bstep = jax.jit(train_step.make_train_step(base_model, btcfg))
+    pre = SyntheticLM(vocab=CFG_100M.vocab, batch=args.batch, seq=args.seq,
+                      task_seed=1)
+    print(f"pre-training base for {args.pretrain_steps} steps ...")
+    for i in range(args.pretrain_steps):
+        bstate, m = bstep(bstate, bfrozen, pre.batch_at(i))
+    pretrained = bstate["trainable"]["base"]
+    print(f"  pretrain loss -> {float(m['loss']):.3f}")
+
+    # fine-tune on the downstream task with each method
+    ft_data = SyntheticLM(vocab=CFG_100M.vocab, batch=args.batch,
+                          seq=args.seq, seed=2, task_seed=42)
+    results = {}
+    for method in ["fourierft", "lora"]:
+        print(f"\n== fine-tuning with {method} ==")
+        results[method] = run(method, args.steps, pretrained, ft_data)
+        r = results[method]
+        print(f"  trainable={r['trainable']:,}  loss {r['first']:.3f} -> "
+              f"{r['final']:.3f}  ({r['wall_s']:.0f}s, "
+              f"anomalies={r['anomalies']})")
+
+    f, l = results["fourierft"], results["lora"]
+    print(f"\nFourierFT used {f['trainable']/l['trainable']*100:.1f}% of "
+          f"LoRA's parameters; final losses: fourier={f['final']:.3f} "
+          f"lora={l['final']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

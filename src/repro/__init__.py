@@ -1,0 +1,2 @@
+"""repro — FourierFT (ICML 2024) as a production multi-pod JAX framework."""
+__version__ = "1.0.0"

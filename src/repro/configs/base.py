@@ -1,0 +1,156 @@
+"""Config dataclasses for models, PEFT, shapes, and meshes.
+
+Every assigned architecture gets one module in this package defining `CONFIG`.
+`repro.configs.get(arch_id)` is the registry entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state: int
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class ZambaConfig:
+    """Hybrid wiring: a shared attention+MLP block applied every `shared_every`
+    mamba blocks (weights shared; per-application LoRA like the real Zamba2)."""
+    shared_every: int = 6
+    shared_lora_r: int = 0  # 0 = no per-application LoRA on the shared block
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    vocab: int
+    # attention (ignored for pure-ssm)
+    n_heads: int = 0
+    n_kv: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    mrope: bool = False          # multimodal 3-D RoPE (qwen2-vl)
+    rope_theta: float = 10000.0
+    gated_mlp: bool = True       # SwiGLU vs GELU MLP
+    # extras
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    zamba: Optional[ZambaConfig] = None
+    n_codebooks: int = 0         # musicgen: parallel codebook embeddings/heads
+    embed_inputs: bool = True    # False for VLM stub (input = patch embeddings)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # numerics
+    dtype: str = "bfloat16"      # activation dtype
+    param_dtype: str = "bfloat16"
+    # long-context capability flag (drives long_500k skip logic)
+    subquadratic: bool = False
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class PEFTConfig:
+    method: str = "fourierft"     # fourierft | lora | bitfit | none | full
+    # --- FourierFT ---
+    n: int = 1000
+    alpha: float = 300.0
+    entry_seed: int = 2024        # paper: value 2024 shared across layers
+    freq_bias: bool = False       # Eq. 5 Gaussian band-pass sampling
+    fc: float = 0.0               # favored central frequency
+    bandwidth: float = 200.0
+    basis: str = "fourier"        # fourier | random | orthogonal (Table 6)
+    strategy: str = "merged"      # merged | factored (see DESIGN §2)
+    use_pallas: str = "auto"      # auto | never | interpret  (kernel path select)
+    # --- LoRA baseline ---
+    lora_r: int = 8
+    lora_alpha: float = 16.0
+    # --- common ---
+    target_modules: Tuple[str, ...] = ("wq", "wv")
+    train_head: bool = False
+    param_dtype: str = "float32"  # adapters train in f32
+
+    def replace(self, **kw) -> "PEFTConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+# The assigned LM shape set (identical across the 10 archs).
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-3
+    head_learning_rate: float = 1e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "linear"      # linear | cosine | constant
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatch: int = 0           # 0 = no accumulation
+    remat: str = "full"           # full | dots | none
+    anomaly_threshold: float = 1e4
+    seed: int = 0
+
+    def replace(self, **kw) -> "TrainConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def shape_for(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]

@@ -1,0 +1,7 @@
+from repro.core import basis, fourierft, lora, peft
+from repro.core.fourierft import (
+    factored_apply, fourier_bases, materialize_delta, sample_entries,
+)
+from repro.core.peft import (
+    AdapterSite, count_trainable, init_adapters, site_delta, storage_bytes,
+)

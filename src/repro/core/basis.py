@@ -1,0 +1,53 @@
+"""Basis-expressiveness ablation (paper Table 6): replace the Fourier basis with
+random Gaussian or orthogonal bases.
+
+Paper formulation: S = B¹ F B², F sparse at entries (u_l, v_l). Only the
+selected columns/rows of B¹/B² ever touch F, so we generate exactly those:
+ΔW = scale · (B1 ⊙ c) @ B2ᵀ with B1 (d1, n), B2 (d2, n).
+
+Scale convention: Fourier basis vectors have entries of magnitude O(1) and the
+paper divides by d1·d2 (ifft2 normalization). Orthogonal bases have unit-norm
+columns (entries O(1/√d)); random Gaussian have unit-variance entries. We match
+the expected ΔW Frobenius magnitude of the Fourier path so that a single α
+sweep is comparable across bases:
+    fourier:    α/(d1·d2)          (||basis col||² ≈ d/2)
+    random:     α/(d1·d2)          (||col||² ≈ d)
+    orthogonal: α/(2·√(d1·d2))     (||col||² = 1)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_basis(rng: jax.Array, kind: str, d1: int, d2: int, n: int):
+    k1, k2 = jax.random.split(rng)
+    b1 = jax.random.normal(k1, (d1, n), jnp.float32)
+    b2 = jax.random.normal(k2, (d2, n), jnp.float32)
+    if kind == "orthogonal":
+        if n > min(d1, d2):
+            raise ValueError(f"orthogonal basis needs n <= min(d1,d2), got "
+                             f"n={n}, dims=({d1},{d2})")
+        b1, _ = jnp.linalg.qr(b1)   # (d1, n) orthonormal columns
+        b2, _ = jnp.linalg.qr(b2)
+    elif kind != "random":
+        raise ValueError(f"unknown basis kind {kind!r}")
+    return b1, b2
+
+
+def basis_scale(kind: str, d1: int, d2: int, alpha: float) -> float:
+    if kind in ("random", "fourier"):
+        return alpha / (d1 * d2)
+    return alpha / (2.0 * (d1 * d2) ** 0.5)
+
+
+def materialize_delta_basis(c: jax.Array, b1: jax.Array, b2: jax.Array,
+                            kind: str, alpha: float, out_dtype=None):
+    d1, d2 = b1.shape[0], b2.shape[0]
+    scale = basis_scale(kind, d1, d2, alpha)
+    if c.ndim == 1:
+        dw = (b1 * c.astype(jnp.float32)) @ b2.T
+    else:
+        dw = jnp.einsum("ln,dn,en->lde", c.astype(jnp.float32), b1, b2)
+    dw = dw * scale
+    return dw.astype(out_dtype) if out_dtype is not None else dw

@@ -1,0 +1,32 @@
+"""LoRA baseline (Hu et al. 2021) — the paper's primary comparator.
+
+Convention: weights are (d_in, d_out), y = x @ W. ΔW = A @ B with
+A (d_in, r) ~ N(0, 1/r) and B (r, d_out) = 0, scaled by lora_alpha / r.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_lora(rng: jax.Array, d_in: int, d_out: int, r: int,
+              stack: int | None = None, dtype=jnp.float32):
+    shape_a = (d_in, r) if stack is None else (stack, d_in, r)
+    shape_b = (r, d_out) if stack is None else (stack, r, d_out)
+    a = jax.random.normal(rng, shape_a, dtype) * (1.0 / jnp.sqrt(r))
+    b = jnp.zeros(shape_b, dtype)
+    return {"lora_a": a, "lora_b": b}
+
+
+def lora_delta(a: jax.Array, b: jax.Array, lora_alpha: float, r: int,
+               out_dtype=None) -> jax.Array:
+    dw = jnp.einsum("...dr,...rf->...df", a.astype(jnp.float32),
+                    b.astype(jnp.float32)) * (lora_alpha / r)
+    return dw.astype(out_dtype) if out_dtype is not None else dw
+
+
+def lora_apply(x: jax.Array, a: jax.Array, b: jax.Array, lora_alpha: float,
+               r: int) -> jax.Array:
+    y = ((x.astype(jnp.float32) @ a.astype(jnp.float32))
+         @ b.astype(jnp.float32)) * (lora_alpha / r)
+    return y.astype(x.dtype)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: FourierFT ΔW
+materialization and its backward projection. `ops.fourier_deltaw` is the
+public entry; `ref` holds the literal-paper (ifft2) oracles."""
+from repro.kernels import fourier_deltaw, ops, ref
+from repro.kernels.ops import fourier_deltaw as _  # noqa: F401 (re-export check)

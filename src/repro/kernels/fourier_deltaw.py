@@ -1,0 +1,131 @@
+"""Pallas TPU kernels for FourierFT ΔW materialization and its VJP.
+
+Forward (`deltaw`): grid over (d1/bm, d2/bn) output tiles. Each tile builds its
+cos/sin basis blocks *in VMEM* from integer phase arithmetic (no HBM-resident
+(d, n) basis — saves 4·(d1+d2)·n·4 bytes of HBM traffic per materialization)
+and accumulates two MXU matmuls:
+
+    tile = (cosθ ⊙ c) @ cosφᵀ − (sinθ ⊙ c) @ sinφᵀ,  scaled by α/(d1·d2)
+
+Phase precision: angles are reduced exactly in int32 — (j·u) mod d1 is exact
+for d1,d2 < 46341 (j·u < 2³¹), so cos/sin see arguments in [0, 2π) with full
+f32 precision even for 8k×30k weights. ops.py falls back to the einsum path
+for larger dims (vocab-sized grids; not a default adaptation target).
+
+Backward (`dc`): same tiling over the incoming cotangent g; per tile
+    dc += Σ_k cosφ[k,:] ⊙ (gᵀ cosθ)[k,:] − sinφ ⊙ (gᵀ sinθ)
+accumulated into a single (n,) output block across sequential grid steps
+(TPU grid order is sequential; interpret mode matches).
+
+VMEM at (bm, bn, n) = (256, 256, 1024): basis blocks 4·256·1024·4B = 4MB,
+tile accumulators 0.5MB — comfortably double-bufferable in 16MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.283185307179586
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+
+
+def _phase_block(idx0: jax.Array, size: int, dim: int, uv: jax.Array,
+                 c: jax.Array | None):
+    """cos/sin basis block for rows [idx0, idx0+size) of a `dim`-point axis.
+
+    uv: (n,) int32 spectral indices. Returns (cos (size,n), sin (size,n)),
+    optionally pre-scaled by c."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (size, 1), 0) + idx0
+    prod = rows * uv[None, :].astype(jnp.int32)          # exact in int32
+    prod = jax.lax.rem(prod, jnp.int32(dim))
+    ang = prod.astype(jnp.float32) * (TWO_PI / dim)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if c is not None:
+        cos = cos * c[None, :]
+        sin = sin * c[None, :]
+    return cos, sin
+
+
+def _deltaw_kernel(c_ref, u_ref, v_ref, o_ref, *, d1, d2, alpha, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    c = c_ref[...]
+    ct, st = _phase_block(i * bm, bm, d1, u_ref[...], c)
+    cp, sp = _phase_block(j * bn, bn, d2, v_ref[...], None)
+    acc = jax.lax.dot_general(ct, cp, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc -= jax.lax.dot_general(st, sp, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    o_ref[...] = acc * (alpha / (d1 * d2))
+
+
+def deltaw_pallas(c: jax.Array, u: jax.Array, v: jax.Array, d1: int, d2: int,
+                  alpha: float, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                  interpret: bool = False) -> jax.Array:
+    """c (n,) f32, u/v (n,) i32 (n padded to 128 | c zero-padded).
+    Returns ΔW (d1p, d2p) f32 with d1p/d2p the block-padded dims."""
+    n = c.shape[0]
+    d1p = -(-d1 // bm) * bm
+    d2p = -(-d2 // bn) * bn
+    grid = (d1p // bm, d2p // bn)
+    kernel = functools.partial(_deltaw_kernel, d1=d1, d2=d2, alpha=alpha,
+                               bm=bm, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d1p, d2p), jnp.float32),
+        interpret=interpret,
+    )(c, u, v)
+
+
+def _dc_kernel(g_ref, u_ref, v_ref, o_ref, *, d1, d2, alpha, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)                    # (bm, bn)
+    ct, st = _phase_block(i * bm, bm, d1, u_ref[...], None)
+    cp, sp = _phase_block(j * bn, bn, d2, v_ref[...], None)
+    a = jax.lax.dot_general(g, ct, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bn, n)
+    b = jax.lax.dot_general(g, st, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    contrib = jnp.sum(a * cp - b * sp, axis=0) * (alpha / (d1 * d2))
+    o_ref[...] += contrib
+
+
+def dc_pallas(g: jax.Array, u: jax.Array, v: jax.Array, d1: int, d2: int,
+              alpha: float, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+              interpret: bool = False) -> jax.Array:
+    """g (d1p, d2p) f32 cotangent (zero-padded outside (d1, d2)) -> dc (n,)."""
+    n = u.shape[0]
+    d1p, d2p = g.shape
+    grid = (d1p // bm, d2p // bn)
+    kernel = functools.partial(_dc_kernel, d1=d1, d2=d2, alpha=alpha,
+                               bm=bm, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(g, u, v)

@@ -1,0 +1,80 @@
+"""Jitted public wrappers for the FourierFT kernels.
+
+`fourier_deltaw(c, entries, d1, d2, alpha)` — differentiable (custom VJP wired
+to the `dc` kernel), handles n/dim padding, vmaps over stacked layers, and
+falls back to the einsum path when the Pallas path is unavailable (CPU
+backend without interpret) or the int32 phase reduction would overflow
+(dims ≥ 46341, i.e. vocab-sized grids).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fourierft as _f
+from repro.kernels import fourier_deltaw as _k
+
+_INT32_SAFE_DIM = 46340  # max dim with exact (j*u) in int32
+
+
+def _pad_n(c, entries):
+    n = c.shape[-1]
+    npad = -(-n // 128) * 128
+    if npad == n:
+        return c, entries
+    pc = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, npad - n)])
+    pe = jnp.pad(entries, ((0, 0), (0, npad - n)))
+    return pc, pe
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _deltaw(c, entries, d1, d2, alpha, interpret):
+    return _deltaw_fwd(c, entries, d1, d2, alpha, interpret)[0]
+
+
+def _deltaw_fwd(c, entries, d1, d2, alpha, interpret):
+    cp, ep = _pad_n(c, entries)
+    out = _k.deltaw_pallas(cp, ep[0], ep[1], d1, d2, alpha,
+                           interpret=interpret)
+    return out[:d1, :d2], (entries,)
+
+
+def _deltaw_bwd(d1, d2, alpha, interpret, res, g):
+    (entries,) = res
+    n = entries.shape[1]
+    _, ep = _pad_n(jnp.zeros((n,), jnp.float32), entries)
+    bm, bn = _k.DEFAULT_BM, _k.DEFAULT_BN
+    d1p, d2p = -(-d1 // bm) * bm, -(-d2 // bn) * bn
+    gp = jnp.pad(g.astype(jnp.float32), ((0, d1p - d1), (0, d2p - d2)))
+    dc = _k.dc_pallas(gp, ep[0], ep[1], d1, d2, alpha, interpret=interpret)
+    return (dc[:n], None)
+
+
+_deltaw.defvjp(_deltaw_fwd, _deltaw_bwd)
+
+
+def _use_pallas(d1: int, d2: int, mode: str) -> tuple[bool, bool]:
+    """-> (use_kernel, interpret)."""
+    if mode == "never" or max(d1, d2) > _INT32_SAFE_DIM:
+        return False, False
+    if mode == "interpret":
+        return True, True
+    # auto: compiled Pallas on TPU, einsum elsewhere
+    on_tpu = jax.default_backend() == "tpu"
+    return (True, False) if on_tpu else (False, False)
+
+
+def fourier_deltaw(c: jax.Array, entries: jax.Array, d1: int, d2: int,
+                   alpha: float, *, use_pallas: str = "auto",
+                   out_dtype=None) -> jax.Array:
+    """ΔW for c (n,) -> (d1, d2), or stacked c (L, n) -> (L, d1, d2)."""
+    use, interpret = _use_pallas(d1, d2, use_pallas)
+    if not use:
+        return _f.materialize_delta(c, entries, d1, d2, alpha,
+                                    out_dtype=out_dtype)
+    fn = lambda cc: _deltaw(cc.astype(jnp.float32), entries, d1, d2, alpha,
+                            interpret)
+    out = jax.vmap(fn)(c) if c.ndim == 2 else fn(c)
+    return out.astype(out_dtype) if out_dtype is not None else out

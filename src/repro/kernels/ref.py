@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the FourierFT kernels.
+
+`deltaw_ref` is the *literal paper computation* (Algorithm 1): scatter the n
+coefficients into a dense spectral matrix, `ifft2`, real part, scale by α.
+The kernels must match it bit-for-bit up to float tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deltaw_ref(c: jax.Array, entries: jax.Array, d1: int, d2: int,
+               alpha: float) -> jax.Array:
+    """c (n,) f32, entries (2, n) i32 -> ΔW (d1, d2) f32."""
+    dense = jnp.zeros((d1, d2), jnp.complex64)
+    dense = dense.at[entries[0], entries[1]].set(c.astype(jnp.complex64))
+    return (alpha * jnp.fft.ifft2(dense).real).astype(jnp.float32)
+
+
+def dc_ref(g: jax.Array, entries: jax.Array, alpha: float) -> jax.Array:
+    """VJP oracle: dL/dc_l = α/(d1·d2) Σ_{j,k} g[j,k]·cos(2π(j·u_l/d1 + k·v_l/d2)).
+
+    Equivalently the real part of the (forward) FFT of g sampled at the
+    entries — which is how we compute it here, keeping the oracle on the
+    spectral-transform side of the identity."""
+    d1, d2 = g.shape
+    spec = jnp.fft.fft2(g.astype(jnp.complex64))
+    vals = spec[entries[0], entries[1]]
+    return (alpha / (d1 * d2)) * vals.real.astype(jnp.float32)

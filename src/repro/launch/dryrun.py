@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the production
+meshes — (16, 16) single-pod and (2, 16, 16) multi-pod — with full sharding,
+printing memory_analysis() and cost_analysis() and writing per-cell JSON for
+the roofline report (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+    (--all runs each cell in a fresh subprocess: isolated, resumable)
+"""
+import argparse
+import json
+import subprocess
+import sys
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--variant", type=str, default="baseline")
+    ap.add_argument("--remat", type=str, default="full")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--mesh-shape", type=str, default=None,
+                    help="perf-variant mesh remap, e.g. 64x4")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have a result JSON")
+    return ap.parse_args(argv)
+
+
+def cell_done(out_dir, arch, shape, mesh, variant):
+    tag = f"{arch}__{shape}__{mesh}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    return os.path.exists(os.path.join(out_dir, tag + ".json"))
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        import repro.configs as configs
+        from repro.launch import dryrun_lib
+        failures = []
+        for multi in meshes:
+            mname = "multi" if multi else "single"
+            for arch in configs.ARCH_IDS:
+                cfg = configs.get(arch)
+                for shape in configs.SHAPES:
+                    if dryrun_lib.long_context_skip(cfg, shape):
+                        print(f"SKIP {arch} {shape.name} {mname} "
+                              "(full attention; DESIGN.md)")
+                        continue
+                    if not args.force and cell_done(args.out, arch,
+                                                    shape.name, mname,
+                                                    args.variant):
+                        print(f"done {arch} {shape.name} {mname} (cached)")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape.name,
+                           "--mesh", mname, "--out", args.out,
+                           "--variant", args.variant,
+                           "--remat", args.remat]
+                    if args.microbatch is not None:
+                        cmd += ["--microbatch", str(args.microbatch)]
+                    if args.save_hlo:
+                        cmd += ["--save-hlo"]
+                    print(f"RUN  {arch} {shape.name} {mname} ...", flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape.name, mname))
+                        print(f"FAIL {arch} {shape.name} {mname}", flush=True)
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("all cells compiled OK")
+        return
+
+    from repro.launch import dryrun_lib
+    assert args.arch and args.shape
+    for multi in meshes:
+        res = dryrun_lib.run_cell(
+            args.arch, args.shape, multi, args.out, variant=args.variant,
+            remat=args.remat, microbatch=args.microbatch,
+            mesh_shape=args.mesh_shape, save_hlo=args.save_hlo)
+        print(json.dumps(
+            {k: res[k] for k in ("arch", "shape", "mesh", "terms", "dominant",
+                                 "roofline_fraction", "useful_flops_ratio")},
+            indent=1))
+        print("memory_analysis:", json.dumps(res["memory"], indent=1))
+        print("cost_analysis: flops/dev=%.3e bytes/dev=%.3e coll/dev=%.3e"
+              % (res["flops_per_device"], res["bytes_per_device"],
+                 res["collective_bytes_per_device"]))
+
+
+if __name__ == "__main__":
+    main()

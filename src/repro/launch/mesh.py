@@ -1,0 +1,27 @@
+"""Production meshes. Function (not module-level constant) so importing never
+touches jax device state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = jax.device_count()
+    data = n // model
+    return make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,2 @@
+from repro.models import attention, common, mamba2, moe, registry, ssm_lm, transformer, zamba2
+from repro.models.registry import Model, adapter_sites, build, default_targets

@@ -1,0 +1,284 @@
+"""GQA attention: direct path (small S), flash-algorithm chunked path
+(online softmax over KV blocks, O(S·block) memory), and the decode path over a
+KV cache. Supports qk-norm, QKV bias, RoPE/M-RoPE.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Tq,K,G,dh), k (B,Tk,K,dh) -> (B,K,G,Tq,Tk) f32."""
+    return jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def direct_attention(q, k, v, *, causal: bool = True,
+                     q_offset: int | jax.Array = 0,
+                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q (B,Sq,H,dh), k/v (B,Skv,K,dh). Suitable for small S and for decode.
+
+    kv_len: optional dynamic valid-KV length (positions >= kv_len are masked).
+    q_offset: global position of q[0] (for causal masking during chunking or
+    cached decode)."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = dh ** -0.5
+    qs = q.reshape(B, Sq, K, G, dh) * scale
+    s = _gqa_scores(qs, k)                                   # (B,K,G,Sq,Skv)
+    Skv = k.shape[1]
+    kv_pos = jnp.arange(Skv)
+    mask = None
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = q_pos[:, None] >= kv_pos[None, :]
+    if kv_len is not None:
+        valid = kv_pos[None, :] < kv_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      chunk_q: int = 512, chunk_kv: int = None) -> jax.Array:
+    """Flash-attention algorithm in pure JAX: sequential scan over q blocks,
+    inner scan over kv blocks with running (max, denom, acc). Peak memory is
+    one (B,K,G,Tq,Tk) score block. Lowers to compile-size-constant HLO.
+    """
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk_kv = chunk_q if chunk_kv is None else chunk_kv
+    assert chunk_q == chunk_kv, "diagonal-block masking needs equal chunks"
+    if S % chunk_q or S % chunk_kv:
+        return direct_attention(q, k, v, causal=causal)
+    nq, nk = S // chunk_q, S // chunk_kv
+    scale = dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, chunk_q, K, G, dh), 1, 0) * scale
+    kb = jnp.moveaxis(k.reshape(B, nk, chunk_kv, K, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, chunk_kv, K, dh), 1, 0)
+    # Masking via ONE trace-time triangular constant + scalar block flags.
+    # (A per-block `where(q_pos >= kv_pos, ...)` mask looks loop-invariant to
+    # XLA, which hoists the full (nq, nk, Tq, Tk) pred stack out of the scans
+    # — measured >1GB on train_4k. Additive arithmetic on a shared constant
+    # keeps the worst-case hoist at one (Tq, Tk) f32 block.)
+    tri = jnp.where(jnp.arange(chunk_q)[:, None] >= jnp.arange(chunk_kv)[None, :],
+                    0.0, NEG_INF).astype(jnp.float32)
+
+    def outer(_, qblk_i):
+        qblk, iq = qblk_i
+
+        def inner(state, kvblk_j):
+            m, l, acc = state
+            kblk, vblk, jk = kvblk_j
+            s = _gqa_scores(qblk, kblk)                      # (B,K,G,Tq,Tk)
+            if causal:
+                # block cases: jk < iq -> no mask; jk == iq -> triangular;
+                # jk > iq -> fully masked (scalar flags, no pred tensors)
+                diag = (jk == iq).astype(jnp.float32)
+                future = (jk > iq).astype(jnp.float32)
+                s = s + tri * diag + NEG_INF * future
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqt,btkd->bkgqd", p,
+                                    vblk.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, K, G, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, chunk_q), jnp.float32),
+                jnp.zeros((B, K, G, chunk_q, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            inner, init, (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,K,G,Tq,dh)
+        return None, jnp.moveaxis(out, 3, 1)                 # (B,Tq,K,G,dh)
+
+    _, blocks = jax.lax.scan(outer, None, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(blocks, 0, 1)                         # (B,nq,Tq,K,G,dh)
+    return out.reshape(B, S, H, dh).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a hand-written VJP (§Perf iteration A2, EXPERIMENTS.md)
+#
+# jax's autodiff of the chunked scan stores every (nq, nk, B, K, G, Tq, Tk)
+# softmax block as a linearization residual — measured ≈4TB/step of HBM
+# traffic on yi-9b train_4k. The flash backward saves only (m, l, o) per row
+# and RECOMPUTES p per block, exactly like the TPU/GPU flash kernels.
+# ---------------------------------------------------------------------------
+
+def _tri_pairs(nq: int):
+    """Static (iq, jk) index arrays covering jk <= iq, ordered by iq then jk
+    — exactly the nq(nq+1)/2 causal block pairs. Fully-masked future blocks
+    are never touched: ~2x less attention compute/traffic than masked-full,
+    with static trip counts (scan-friendly, cost-analysis-exact)."""
+    pairs = [(i, j) for i in range(nq) for j in range(i + 1)]
+    iqs = jnp.array([p[0] for p in pairs], jnp.int32)
+    jks = jnp.array([p[1] for p in pairs], jnp.int32)
+    return iqs, jks
+
+
+def _flash_fwd_scan(q, k, v, *, causal: bool, chunk: int):
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    nq = nk = S // chunk
+    scale = dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, chunk, K, G, dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, chunk, K, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, chunk, K, dh), 1, 0)
+    tri = jnp.where(jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :],
+                    0.0, NEG_INF).astype(jnp.float32)
+    if not causal:
+        iqs = jnp.repeat(jnp.arange(nq, dtype=jnp.int32), nk)
+        jks = jnp.tile(jnp.arange(nk, dtype=jnp.int32), nq)
+    else:
+        iqs, jks = _tri_pairs(nq)
+
+    def step(carry, pair):
+        m, l, acc, mbuf, lbuf, obuf = carry
+        iq, jk = pair
+        fresh = (jk == 0)
+        # reset per-q-block state at the start of each row of pairs
+        m = jnp.where(fresh, NEG_INF, m)
+        l = jnp.where(fresh, 0.0, l)
+        acc = jnp.where(fresh, 0.0, acc)
+        qblk = jax.lax.dynamic_index_in_dim(qb, iq, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, jk, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, jk, 0, keepdims=False)
+        s = _gqa_scores(qblk, kblk) * scale
+        if causal:
+            s = s + tri * (jk == iq).astype(jnp.float32)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bkgqt,btkd->bkgqd", p,
+                                vblk.astype(jnp.float32)))
+        # write-through: the last pair of each row leaves the final state
+        out_blk = (acc_new
+                   / jnp.maximum(l_new, 1e-30)[..., None]).astype(v.dtype)
+        mbuf = jax.lax.dynamic_update_index_in_dim(mbuf, m_new, iq, 0)
+        lbuf = jax.lax.dynamic_update_index_in_dim(lbuf, l_new, iq, 0)
+        obuf = jax.lax.dynamic_update_index_in_dim(obuf, out_blk, iq, 0)
+        return (m_new, l_new, acc_new, mbuf, lbuf, obuf), None
+
+    init = (
+        jnp.full((B, K, G, chunk), NEG_INF, jnp.float32),
+        jnp.zeros((B, K, G, chunk), jnp.float32),
+        jnp.zeros((B, K, G, chunk, dh), jnp.float32),
+        jnp.zeros((nq, B, K, G, chunk), jnp.float32),
+        jnp.zeros((nq, B, K, G, chunk), jnp.float32),
+        jnp.zeros((nq, B, K, G, chunk, dh), v.dtype),
+    )
+    (_, _, _, m, l, obuf), _ = jax.lax.scan(step, init, (iqs, jks))
+    out = jnp.transpose(obuf, (1, 0, 4, 2, 3, 5)).reshape(B, S, H, dh)
+    return out.astype(v.dtype), m, l            # m, l: (nq, B, K, G, Tq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, chunk: int = 512):
+    out, _, _ = _flash_fwd_scan(q, k, v, causal=causal, chunk=chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, chunk):
+    out, m, l = _flash_fwd_scan(q, k, v, causal=causal, chunk=chunk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, chunk, res, do):
+    q, k, v, out, m, l = res
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    nq = nk = S // chunk
+    scale = dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, chunk, K, G, dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, chunk, K, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, chunk, K, dh), 1, 0)
+    dob = jnp.moveaxis(do.reshape(B, nq, chunk, K, G, dh), 1, 0)
+    ob = jnp.moveaxis(out.reshape(B, nq, chunk, K, G, dh), 1, 0)
+    # D_i = rowsum(do * o)
+    Db = jnp.einsum("nbqkgd,nbqkgd->nbkgq", dob.astype(jnp.float32),
+                    ob.astype(jnp.float32))
+    tri = jnp.where(jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :],
+                    0.0, NEG_INF).astype(jnp.float32)
+    if not causal:
+        iqs = jnp.repeat(jnp.arange(nq, dtype=jnp.int32), nk)
+        jks = jnp.tile(jnp.arange(nk, dtype=jnp.int32), nq)
+    else:
+        iqs, jks = _tri_pairs(nq)
+
+    def step(carry, pair):
+        dq_blk, dqbuf, dk_acc, dv_acc = carry
+        iq, jk = pair
+        dq_blk = jnp.where((jk == 0), 0.0, dq_blk)
+        qblk = jax.lax.dynamic_index_in_dim(qb, iq, 0, keepdims=False)
+        doblk = jax.lax.dynamic_index_in_dim(dob, iq, 0, keepdims=False)
+        mi = jax.lax.dynamic_index_in_dim(m, iq, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, iq, 0, keepdims=False)
+        Di = jax.lax.dynamic_index_in_dim(Db, iq, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, jk, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, jk, 0, keepdims=False)
+        s = _gqa_scores(qblk, kblk) * scale      # (B,K,G,Tq,Tk)
+        if causal:
+            s = s + tri * (jk == iq).astype(jnp.float32)
+        p = jnp.exp(s - mi[..., None]) / jnp.maximum(li, 1e-30)[..., None]
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", doblk.astype(jnp.float32),
+                        vblk.astype(jnp.float32))
+        ds = p * (dp - Di[..., None])
+        dq_blk = dq_blk + scale * jnp.einsum(
+            "bkgqt,btkd->bqkgd", ds, kblk.astype(jnp.float32))
+        dqbuf = jax.lax.dynamic_update_index_in_dim(dqbuf, dq_blk, iq, 0)
+        dk_j = scale * jnp.einsum("bkgqt,bqkgd->btkd", ds,
+                                  qblk.astype(jnp.float32))
+        dv_j = jnp.einsum("bkgqt,bqkgd->btkd", p, doblk.astype(jnp.float32))
+        dk_acc = jax.lax.dynamic_update_slice(
+            dk_acc, jax.lax.dynamic_slice(
+                dk_acc, (jk * chunk, 0, 0, 0),
+                (chunk, B, K, dh)) + jnp.moveaxis(dk_j, 1, 0),
+            (jk * chunk, 0, 0, 0))
+        dv_acc = jax.lax.dynamic_update_slice(
+            dv_acc, jax.lax.dynamic_slice(
+                dv_acc, (jk * chunk, 0, 0, 0),
+                (chunk, B, K, dh)) + jnp.moveaxis(dv_j, 1, 0),
+            (jk * chunk, 0, 0, 0))
+        return (dq_blk, dqbuf, dk_acc, dv_acc), None
+
+    zeros_kv = jnp.zeros((S, B, K, dh), jnp.float32)
+    init = (jnp.zeros((B, chunk, K, G, dh), jnp.float32),
+            jnp.zeros((nq, B, chunk, K, G, dh), jnp.float32),
+            zeros_kv, zeros_kv)
+    (_, dqbuf, dk_acc, dv_acc), _ = jax.lax.scan(step, init, (iqs, jks))
+    dq = jnp.moveaxis(dqbuf, 0, 1).reshape(B, S, H, dh).astype(q.dtype)
+    dk = jnp.moveaxis(dk_acc, 0, 1).reshape(B, S, K, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dv_acc, 0, 1).reshape(B, S, K, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q, k, v, *, causal: bool = True,
+              direct_threshold: int = 1024, chunk: int = 512,
+              flash: bool = True) -> jax.Array:
+    S = q.shape[1]
+    if S <= direct_threshold:
+        return direct_attention(q, k, v, causal=causal)
+    if flash and S % chunk == 0:
+        return flash_attention(q, k, v, causal, chunk)
+    return chunked_attention(q, k, v, causal=causal)

@@ -1,0 +1,243 @@
+"""Mamba2 mixer via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm for train/prefill (intra-chunk quadratic + inter-chunk state
+recurrence), O(1)-state decode step. Heads are sharded over the `model` axis;
+B/C groups (n_groups=1) are replicated (small: 2·n_groups·state per token).
+
+Layout: x (B, S, H, P) with H = expand·d_model / head_dim, P = head_dim.
+Separate projections (wz/wx/wbc/wdt) instead of one fused in_proj so each gets
+the TP-correct sharding (see DESIGN §7).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.head_dim, ssm.n_groups
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: out[b,s,c] = b_c + Σ_i x[b, s-w+1+i, c]·w[c,i].
+    x (B, S, C), w (C, width), b (C,)."""
+    width = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(dta: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} dta[..., m],
+    -inf for j > i. dta (..., Q)."""
+    Q = dta.shape[-1]
+    cs = jnp.cumsum(dta, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # sum_{j<m<=i}
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int):
+    """SSD forward.
+    x (b, S, H, P); dt (b, S, H) [post-softplus]; A (H,) negative;
+    B, C (b, S, G, N); D (H,). Returns y (b, S, H, P) and final state
+    (b, H, P, N)."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(b, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+
+    dta = dtc * A                                     # (b,nc,Q,H)
+    dtx = xc * dtc[..., None]                         # dt-weighted inputs
+
+    # --- intra-chunk (quadratic within chunk) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dta, 3, 2)))  # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)
+    if G != H:  # head h uses group h // rep
+        scores = jnp.repeat(scores, rep, axis=2)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * Lmat, dtx)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(dta, axis=2)                     # (b,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (b,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3) if G != H else Bc  # (b,nc,Q,H,N)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", Bh * decay_to_end[..., None], dtx)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(jnp.sum(dta, axis=2))       # (b,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_new, dec = inp
+        s = s_prev * dec[:, :, None, None] + s_new
+        return s, s_prev
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (b,nc,H,P,N)
+
+    # --- inter-chunk output ---
+    in_decay = jnp.exp(cum)                           # (b,nc,Q,H)
+    Ch = jnp.repeat(Cc, rep, axis=3) if G != H else Cc
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", Ch * in_decay[..., None], prev_states)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_recurrent_oracle(x, dt, A, B, C, D):
+    """Naive per-token recurrence (test oracle). Same signature/semantics."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A)                      # (b,H)
+        state = (state * decay[:, :, None, None]
+                 + jnp.einsum("bhn,bhp,bh->bhpn", Bt, xt, dtt))
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def init_mamba_params(rng, cfg: ModelConfig, stack: int, dtype):
+    from repro.models.common import dense_init
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner, H, P, G = dims(cfg)
+    conv_ch = d_inner + 2 * G * ssm.state
+    ks = jax.random.split(rng, 8)
+    L = (stack,) if stack else ()
+    p = {
+        "norm": jnp.ones(L + (d,), dtype),
+        "wz": dense_init(ks[0], L + (d, d_inner), dtype),
+        "wx": dense_init(ks[1], L + (d, d_inner), dtype),
+        "wbc": dense_init(ks[2], L + (d, 2 * G * ssm.state), dtype),
+        "wdt": dense_init(ks[3], L + (d, H), dtype),
+        "conv_w": dense_init(ks[4], L + (conv_ch, ssm.d_conv), dtype, 0.2),
+        "conv_b": jnp.zeros(L + (conv_ch,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[5], L + (H,), jnp.float32)
+                    * (jnp.log(ssm.dt_max) - jnp.log(ssm.dt_min))
+                    + jnp.log(ssm.dt_min)))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32))
+                 * jnp.ones(L + (H,), jnp.float32),
+        "Dp": jnp.ones(L + (H,), jnp.float32),
+        "gnorm": jnp.ones(L + (d_inner,), dtype),
+        "wo_ssm": dense_init(ks[6], L + (d_inner, d), dtype),
+    }
+    return p
+
+
+def mamba_block(p: Dict, x: jax.Array, cfg: ModelConfig,
+                linear_fn=None) -> jax.Array:
+    """One pre-norm mamba2 block (train/prefill). x (B, S, d).
+    linear_fn(p, name, x) lets the PEFT layer intercept projections."""
+    from repro.models.common import rms_norm
+    ssm = cfg.ssm
+    d_inner, H, P, G = dims(cfg)
+    if linear_fn is None:
+        linear_fn = lambda pp, name, xx: xx @ pp[name]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z = linear_fn(p, "wz", h)
+    xin = linear_fn(p, "wx", h)
+    bc = h @ p["wbc"]
+    dt_raw = h @ p["wdt"]
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = conv1d_causal(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin = conv_out[..., :d_inner]
+    bc = conv_out[..., d_inner:]
+    B, S, _ = x.shape
+    Bmat = bc[..., :G * ssm.state].reshape(B, S, G, ssm.state)
+    Cmat = bc[..., G * ssm.state:].reshape(B, S, G, ssm.state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xin.reshape(B, S, H, P), dt, A, Bmat, Cmat, p["Dp"],
+                       chunk=min(ssm.chunk, S))
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gnorm"], cfg.norm_eps)
+    return x + linear_fn(p, "wo_ssm", y)
+
+
+def init_mamba_cache(cfg: ModelConfig, stack: int, batch: int, dtype):
+    ssm = cfg.ssm
+    d_inner, H, P, G = dims(cfg)
+    conv_ch = d_inner + 2 * G * ssm.state
+    return {
+        "conv": jnp.zeros((stack, batch, ssm.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((stack, batch, H, P, ssm.state), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: Dict, cache: Dict, x: jax.Array, cfg: ModelConfig,
+                      linear_fn=None):
+    """Single-token step. x (B, 1, d); cache {conv (B,w-1,C), ssm (B,H,P,N)}
+    (per-layer slices). Returns (y (B,1,d), new_cache)."""
+    from repro.models.common import rms_norm
+    ssm = cfg.ssm
+    d_inner, H, P, G = dims(cfg)
+    if linear_fn is None:
+        linear_fn = lambda pp, name, xx: xx @ pp[name]
+    B = x.shape[0]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]            # (B, d)
+    z = linear_fn(p, "wz", h)
+    xin = linear_fn(p, "wx", h)
+    bc = h @ p["wbc"]
+    dt_raw = h @ p["wdt"]
+    conv_in = jnp.concatenate([xin, bc], axis=-1)              # (B, C)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,cw->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+    xin = conv_out[..., :d_inner].reshape(B, H, P)
+    bc = conv_out[..., d_inner:]
+    Bmat = bc[..., :G * ssm.state].reshape(B, G, ssm.state)
+    Cmat = bc[..., G * ssm.state:].reshape(B, G, ssm.state)
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cmat, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    state = (cache["ssm"] * decay[:, :, None, None]
+             + jnp.einsum("bhn,bhp,bh->bhpn", Bh, xin.astype(jnp.float32), dt))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    y = y + xin.astype(jnp.float32) * p["Dp"][None, :, None]
+    y = y.reshape(B, d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["gnorm"], cfg.norm_eps)
+    out = x + linear_fn(p, "wo_ssm", y)[:, None, :]
+    return out, {"conv": new_conv, "ssm": state}

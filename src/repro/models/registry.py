@@ -1,0 +1,180 @@
+"""Model registry: `build(cfg, peft)` returns a `Model` facade with a uniform
+interface across families (dense/moe/audio/vlm transformer, pure-SSM, hybrid).
+
+    model.init(rng)                      -> {"base": ..., "peft": ...}
+    model.loss(params, batch)            -> scalar
+    model.forward(params, batch)         -> (logits, aux)
+    model.decode_step(params, cache, b)  -> (next_tokens, cache)
+    model.init_cache(batch, max_len)     -> cache tree
+    model.input_specs(shape)             -> (batch specs, cache specs | None)
+    model.sites                          -> adapter sites (PEFT targets)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig
+from repro.core import peft as peft_mod
+from repro.core.peft import AdapterSite
+from repro.models import mamba2, ssm_lm, transformer, zamba2
+
+
+def default_targets(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Paper default: attention q/v. Attention-free family: in/out proj."""
+    if cfg.family == "ssm":
+        return ("wx", "wo_ssm")
+    return ("wq", "wv")
+
+
+def adapter_sites(cfg: ModelConfig) -> Tuple[AdapterSite, ...]:
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        return (
+            AdapterSite("layers/wx", cfg.d_model, d_inner, cfg.num_layers),
+            AdapterSite("layers/wo_ssm", d_inner, cfg.d_model, cfg.num_layers),
+        )
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        return (
+            AdapterSite("shared/wq", cfg.d_model, cfg.attn_dim, zamba2.n_apps(cfg)),
+            AdapterSite("shared/wv", cfg.d_model, cfg.kv_dim, zamba2.n_apps(cfg)),
+            AdapterSite("layers/wx", cfg.d_model, d_inner, cfg.num_layers),
+            AdapterSite("layers/wo_ssm", d_inner, cfg.d_model, cfg.num_layers),
+        )
+    return (
+        AdapterSite("layers/wq", cfg.d_model, cfg.attn_dim, cfg.num_layers),
+        AdapterSite("layers/wk", cfg.d_model, cfg.kv_dim, cfg.num_layers),
+        AdapterSite("layers/wv", cfg.d_model, cfg.kv_dim, cfg.num_layers),
+        AdapterSite("layers/wo", cfg.attn_dim, cfg.d_model, cfg.num_layers),
+        AdapterSite("layers/wi", cfg.d_model, cfg.d_ff or cfg.d_model, cfg.num_layers),
+    )
+
+
+_FAMILY_MODULES = {
+    "dense": transformer, "moe": transformer, "audio": transformer,
+    "vlm": transformer, "ssm": ssm_lm, "hybrid": zamba2,
+}
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    peft: PEFTConfig
+    remat: str = "none"
+    # optional sharding-constraint hook `f(param_path, x) -> x`, installed by
+    # the launch layer (anchors merged W+ΔW stacks to the weight's spec)
+    constrain: Optional[Callable] = None
+
+    def __post_init__(self):
+        self._mod = _FAMILY_MODULES[self.cfg.family]
+        if self.peft.method in ("fourierft", "lora", "bitfit"):
+            # resolve per-arch default targets if user kept the generic default
+            if (self.peft.target_modules == ("wq", "wv")
+                    and self.cfg.family in ("ssm",)):
+                self.peft = self.peft.replace(
+                    target_modules=default_targets(self.cfg))
+        self.sites = adapter_sites(self.cfg)
+
+    # ---- params -----------------------------------------------------------
+    def init(self, rng: jax.Array) -> Dict:
+        k1, k2 = jax.random.split(rng)
+        base = self._mod.init_params(k1, self.cfg)
+        adapters = peft_mod.init_adapters(k2, self.sites, self.peft)
+        return {"base": base, "peft": adapters}
+
+    def init_shapes(self) -> Dict:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ---- forward/loss -----------------------------------------------------
+    def forward(self, params: Dict, batch: Dict):
+        return self._mod.forward(params["base"], params["peft"], batch,
+                                 self.cfg, self.peft, self.sites,
+                                 remat=self.remat, constrain=self.constrain)
+
+    def loss(self, params: Dict, batch: Dict) -> jax.Array:
+        return self._mod.loss_fn(params["base"], params["peft"], batch,
+                                 self.cfg, self.peft, self.sites,
+                                 remat=self.remat, constrain=self.constrain)
+
+    # split-tree loss used by the train step (grads w.r.t. trainable only)
+    def loss_from_parts(self, trainable: Dict, frozen_base: Dict,
+                        frozen_adapters: Dict, batch: Dict) -> jax.Array:
+        adapters = _merge_adapter_trees(trainable.get("peft", {}), frozen_adapters)
+        base = frozen_base
+        if "head" in trainable:
+            base = dict(base)
+            base["lm_head"] = trainable["head"]
+        return self._mod.loss_fn(base, adapters, batch, self.cfg, self.peft,
+                                 self.sites, remat=self.remat,
+                                 constrain=self.constrain)
+
+    # ---- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+        return self._mod.init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params: Dict, cache: Dict, batch: Dict):
+        return self._mod.decode_step(params["base"], params["peft"], cache,
+                                     batch, self.cfg, self.peft, self.sites,
+                                     constrain=self.constrain)
+
+    # ---- abstract input specs (dry-run) -------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                batch = {
+                    "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                    "positions": jax.ShapeDtypeStruct((3, B, S), i32),
+                }
+            elif cfg.n_codebooks:
+                batch = {"tokens": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32)}
+            else:
+                batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if shape.kind == "train":
+                lbl = ((B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S))
+                batch["labels"] = jax.ShapeDtypeStruct(lbl, i32)
+            return batch
+        # decode: one new token against a seq_len cache
+        if cfg.family == "vlm":
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16),
+                "positions": jax.ShapeDtypeStruct((3, B, 1), i32),
+            }
+        elif cfg.n_codebooks:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, 1, cfg.n_codebooks), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        return batch
+
+    def cache_specs(self, shape: ShapeConfig) -> Dict:
+        return jax.eval_shape(
+            functools.partial(self.init_cache, shape.global_batch,
+                              shape.seq_len))
+
+    # ---- accounting ---------------------------------------------------------
+    def trainable_params(self) -> int:
+        if self.peft.method == "full":
+            import numpy as _np
+            shapes = jax.eval_shape(
+                lambda: self._mod.init_params(jax.random.PRNGKey(0), self.cfg))
+            return sum(int(_np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        return peft_mod.count_trainable(self.sites, self.peft)
+
+
+def _merge_adapter_trees(trainable: Dict, frozen: Dict) -> Dict:
+    out = {}
+    for name in set(trainable) | set(frozen):
+        out[name] = {**frozen.get(name, {}), **trainable.get(name, {})}
+    return out
+
+
+def build(cfg: ModelConfig, peft: Optional[PEFTConfig] = None,
+          remat: str = "none") -> Model:
+    return Model(cfg, peft or PEFTConfig(), remat=remat)

@@ -1,0 +1,22 @@
+"""LR schedules: warmup + {linear, cosine, constant}."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(step, cfg: TrainConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.maximum(cfg.warmup_steps, 1)
+    # (step + 1): the very first step trains at lr/warmup, not zero
+    warm_frac = jnp.minimum((step + 1.0) / warm, 1.0)
+    total = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) / total, 0.0, 1.0)
+    if cfg.schedule == "linear":
+        decay = 1.0 - prog
+    elif cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    else:
+        decay = 1.0
+    return cfg.learning_rate * warm_frac * decay

@@ -1,0 +1,2 @@
+from repro.train import loop, step
+from repro.train.step import init_state, make_train_step, split_params

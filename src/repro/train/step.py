@@ -1,0 +1,139 @@
+"""Train-step factory: PEFT-filtered gradients, microbatch accumulation,
+anomaly-guarded updates.
+
+Parameters are split into (trainable, frozen): gradients are taken w.r.t. the
+trainable subtree only, so XLA dead-code-eliminates every frozen-weight
+gradient GEMM — the structural memory/compute win of PEFT. The frozen subtree
+is passed as a separate argument (not captured) so the dry-run can shard and
+donate it explicitly.
+
+Anomaly guard (fault tolerance): non-finite or exploding loss/grad-norm skips
+the update (params/opt unchanged) and increments `anomalies` in the state —
+on real fleets this absorbs bit-flip/overflow steps without killing the run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.peft import trainable_adapter_tree
+from repro.models.registry import Model
+from repro.optim import adamw, schedules
+
+
+def split_params(model: Model, params: Dict) -> Tuple[Dict, Dict]:
+    """-> (trainable, frozen). frozen = {"base":..., "peft":... (frozen leaves)}."""
+    peft = model.peft
+    if peft.method == "full":
+        trainable = {"base": params["base"]}
+        frozen = {"base": {}, "peft": {}}
+        return trainable, frozen
+    trainable: Dict = {"peft": trainable_adapter_tree(params["peft"], peft)}
+    frozen_adapters = {
+        site: {k: v for k, v in d.items()
+               if k not in trainable["peft"].get(site, {})}
+        for site, d in params["peft"].items()
+    }
+    base = params["base"]
+    if peft.train_head:
+        base = dict(base)
+        trainable["head"] = base.pop("lm_head")
+    return trainable, {"base": base, "peft": frozen_adapters}
+
+
+def join_params(model: Model, trainable: Dict, frozen: Dict) -> Dict:
+    if model.peft.method == "full":
+        return {"base": trainable["base"], "peft": {}}
+    base = frozen["base"]
+    if "head" in trainable:
+        base = dict(base)
+        base["lm_head"] = trainable["head"]
+    peft_tree = {
+        site: {**frozen["peft"].get(site, {}),
+               **trainable.get("peft", {}).get(site, {})}
+        for site in set(frozen["peft"]) | set(trainable.get("peft", {}))
+    }
+    return {"base": base, "peft": peft_tree}
+
+
+def init_state(model: Model, tcfg: TrainConfig, rng: jax.Array) -> Tuple[Dict, Dict]:
+    """-> (state, frozen). state = {step, trainable, opt, loss_ema, anomalies}."""
+    params = model.init(rng)
+    trainable, frozen = split_params(model, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "trainable": trainable,
+        "opt": adamw.init(trainable),
+        "loss_ema": jnp.zeros((), jnp.float32),
+        "anomalies": jnp.zeros((), jnp.int32),
+    }, frozen
+
+
+def _loss_for(model: Model):
+    if model.peft.method == "full":
+        def loss_f(trainable, frozen, batch):
+            return model.loss({"base": trainable["base"], "peft": {}}, batch)
+    else:
+        def loss_f(trainable, frozen, batch):
+            return model.loss_from_parts(trainable, frozen["base"],
+                                         frozen["peft"], batch)
+    return loss_f
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    loss_f = _loss_for(model)
+
+    def grads_of(trainable, frozen, batch):
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            k = tcfg.microbatch
+
+            def resh(key, x):
+                if key == "positions" and x.ndim == 3:   # (3, B, S) m-rope
+                    return x.reshape((3, k, x.shape[1] // k)
+                                     + x.shape[2:]).swapaxes(0, 1)
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            mb = {kk: resh(kk, v) for kk, v in batch.items()}
+
+            def acc(carry, mbatch):
+                l, g = jax.value_and_grad(loss_f)(trainable, frozen, mbatch)
+                loss_acc, grad_acc = carry
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 trainable))
+            (loss, grads), _ = jax.lax.scan(acc, zero, mb)
+            scale = 1.0 / k
+            return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+        return jax.value_and_grad(loss_f)(trainable, frozen, batch)
+
+    def train_step(state: Dict, frozen: Dict, batch: Dict):
+        loss, grads = grads_of(state["trainable"], frozen, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = schedules.lr_at(state["step"], tcfg)
+        new_params, new_opt = adamw.update(grads, state["opt"],
+                                           state["trainable"], lr, tcfg)
+        bad = (~jnp.isfinite(loss)) | (~jnp.isfinite(gnorm)) \
+            | (loss > tcfg.anomaly_threshold)
+        keep_old = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(bad, o, n), new, old)
+        state = {
+            "step": state["step"] + 1,
+            "trainable": keep_old(new_params, state["trainable"]),
+            "opt": keep_old(new_opt, state["opt"]),
+            "loss_ema": jnp.where(
+                state["step"] == 0, loss,
+                0.99 * state["loss_ema"] + 0.01 * jnp.where(bad, state["loss_ema"], loss)),
+            "anomalies": state["anomalies"] + bad.astype(jnp.int32),
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "skipped": bad.astype(jnp.int32)}
+        return state, metrics
+
+    return train_step

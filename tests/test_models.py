@@ -1,0 +1,215 @@
+"""Per-arch smoke tests (reduced configs, one forward + train step, shape and
+finiteness assertions) plus model-level correctness: SSD oracle, decode ==
+prefill, chunked == direct attention, GQA/M-RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig, TrainConfig
+from repro.models import build, mamba2
+from repro.models.attention import chunked_attention, direct_attention
+from repro.models.common import apply_rope
+from repro.train import step as ts
+
+
+def _batch_for(cfg, B, S, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.bfloat16) * 0.02,
+            "positions": jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                          (3, B, S)),
+            "labels": jnp.ones((B, S), jnp.int32),
+        }
+    if cfg.n_codebooks:
+        t = jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab)
+        return {"tokens": t, "labels": t}
+    t = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return {"tokens": t, "labels": t}
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Assignment requirement: reduced config of the same family, one
+    forward/train step on CPU, output shapes + no NaNs."""
+    cfg = C.reduced(C.get(arch))
+    model = build(cfg, PEFTConfig(n=16, alpha=10.0))
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+    params = model.init(jax.random.PRNGKey(0))
+    logits, aux = model.forward(params, batch)
+    if cfg.n_codebooks:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # one jitted train step
+    tcfg = TrainConfig(total_steps=1, warmup_steps=1)
+    state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(1))
+    step_fn = jax.jit(ts.make_train_step(model, tcfg))
+    state, metrics = step_fn(state, frozen, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+    assert int(metrics["skipped"]) == 0
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = C.reduced(C.get(arch))
+    model = build(cfg, PEFTConfig(n=16, alpha=10.0))
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = model.init_cache(B, 16)
+    b = _batch_for(cfg, B, 1)
+    b.pop("labels")
+    toks, cache2 = model.decode_step(params, cache, b)
+    if cfg.n_codebooks:
+        assert toks.shape == (B, cfg.n_codebooks)
+    else:
+        assert toks.shape == (B,)
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "qwen3-4b", "qwen2.5-32b",
+                                  "olmoe-1b-7b", "mamba2-2.7b", "zamba2-7b",
+                                  "musicgen-medium"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must reproduce the full-forward argmax exactly
+    (validates KV caches, SSM state carry, shared-block caches, rope offsets)."""
+    cfg = C.reduced(C.get(arch)).replace(param_dtype="float32",
+                                         dtype="float32")
+    model = build(cfg, PEFTConfig(n=16, alpha=10.0, param_dtype="float32"))
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, seed=2)
+    batch.pop("labels")
+    logits, _ = model.forward(params, batch)
+    full = jnp.argmax(logits, axis=-1)
+    cache = model.init_cache(B, S + 2, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        if cfg.n_codebooks:
+            bt = {"tokens": batch["tokens"][:, t:t + 1]}
+        else:
+            bt = {"tokens": batch["tokens"][:, t:t + 1]}
+        nt, cache = model.decode_step(params, cache, bt)
+        outs.append(nt)
+    dec = jnp.stack(outs, axis=1)
+    assert (dec == full).mean() == 1.0
+
+
+class TestSSD:
+    def test_chunked_matches_recurrence(self):
+        key = jax.random.PRNGKey(0)
+        b, S, H, P, G, N = 2, 64, 4, 8, 2, 16
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        B = jax.random.normal(ks[3], (b, S, G, N))
+        Cm = jax.random.normal(ks[4], (b, S, G, N))
+        D = jnp.ones((H,))
+        y1, f1 = mamba2.ssd_chunked(x, dt, A, B, Cm, D, chunk=16)
+        y2, f2 = mamba2.ssd_recurrent_oracle(x, dt, A, B, Cm, D)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+        np.testing.assert_allclose(f1, f2, atol=1e-4)
+
+    def test_chunk_size_invariance(self):
+        key = jax.random.PRNGKey(1)
+        b, S, H, P, G, N = 1, 64, 2, 4, 1, 8
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        B = jax.random.normal(ks[3], (b, S, G, N))
+        Cm = jax.random.normal(ks[4], (b, S, G, N))
+        D = jnp.zeros((H,))
+        outs = [mamba2.ssd_chunked(x, dt, A, B, Cm, D, chunk=c)[0]
+                for c in (8, 16, 32, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-4)
+
+
+class TestAttention:
+    def test_chunked_matches_direct(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        B, S, H, K, dh = 2, 1024, 8, 2, 32
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, K, dh))
+        v = jax.random.normal(ks[2], (B, S, K, dh))
+        o1 = chunked_attention(q, k, v, chunk_q=128)
+        o2 = direct_attention(q, k, v)
+        np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+    def test_causality(self):
+        """Perturbing future tokens must not change earlier outputs."""
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        B, S, H, dh = 1, 256, 2, 16
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, H, dh))
+        v = jax.random.normal(ks[2], (B, S, H, dh))
+        o1 = chunked_attention(q, k, v, chunk_q=64)
+        k2 = k.at[:, 200:].set(7.0)
+        v2 = v.at[:, 200:].set(-3.0)
+        o2 = chunked_attention(q, k2, v2, chunk_q=64)
+        np.testing.assert_allclose(o1[:, :200], o2[:, :200], atol=1e-5)
+
+    def test_gqa_equals_expanded_mha(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        B, S, H, K, dh = 2, 64, 8, 2, 16
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, K, dh))
+        v = jax.random.normal(ks[2], (B, S, K, dh))
+        o_gqa = direct_attention(q, k, v)
+        o_mha = direct_attention(q, jnp.repeat(k, H // K, 2),
+                                 jnp.repeat(v, H // K, 2))
+        np.testing.assert_allclose(o_gqa, o_mha, atol=1e-5)
+
+    def test_kv_len_masking(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (1, 1, 4, 16))
+        k = jax.random.normal(ks[1], (1, 32, 4, 16))
+        v = jax.random.normal(ks[2], (1, 32, 4, 16))
+        o1 = direct_attention(q, k, v, causal=False, kv_len=jnp.int32(10))
+        k2 = k.at[:, 10:].set(5.0)
+        o2 = direct_attention(q, k2, v, causal=False, kv_len=jnp.int32(10))
+        np.testing.assert_allclose(o1, o2, atol=1e-6)
+
+
+class TestRope:
+    def test_relative_phase(self):
+        """RoPE: <q_i, k_j> depends only on i - j."""
+        dh = 32
+        q = jnp.ones((1, 1, 1, dh))
+        k = jnp.ones((1, 1, 1, dh))
+        def score(i, j):
+            qr = apply_rope(q, jnp.array([[i]]), 10000.0)
+            kr = apply_rope(k, jnp.array([[j]]), 10000.0)
+            return float(jnp.sum(qr * kr))
+        assert abs(score(5, 3) - score(12, 10)) < 1e-4
+        assert abs(score(5, 3) - score(7, 3)) > 1e-5
+
+    def test_mrope_sections(self):
+        from repro.models.common import mrope_sections
+        assert mrope_sections(128) == (16, 24, 24)
+        assert sum(mrope_sections(128)) == 64
+
+    def test_mrope_matches_rope_when_streams_equal(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 1)[0]
+        x = jax.random.normal(ks, (2, 8, 4, 128))
+        pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+        pos3 = jnp.broadcast_to(pos, (3, 2, 8))
+        a = apply_rope(x, pos, 10000.0, mrope=False)
+        b = apply_rope(x, pos3, 10000.0, mrope=True)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestZamba2Structure:
+    def test_n_apps(self):
+        cfg = C.get("zamba2-7b")
+        from repro.models import zamba2
+        assert cfg.num_layers == 81 and cfg.zamba.shared_every == 6
+        assert zamba2.n_apps(cfg) == 14  # 13 full groups + tail

@@ -1,0 +1,92 @@
+"""Roofline tooling: dryrun_lib accounting helpers + report renderer."""
+import json
+
+import jax
+import pytest
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig
+from repro.launch import dryrun_lib as dl
+from repro.launch import roofline as R
+from repro.models import build
+
+
+class TestAccounting:
+    def test_backbone_param_counts_exclude_embeddings(self):
+        model = build(C.get("yi-6b"), PEFTConfig(method="none"))
+        total, active = dl.backbone_params(model)
+        assert total == active            # dense: all params active
+        # llama-arch analytic: L*(d*(attn+2kv+attn) + 3*d*ff) (+norms)
+        d, L, ff = 4096, 32, 11008
+        analytic = L * (d * (4096 + 512 + 512 + 4096) + 3 * d * ff)
+        assert abs(total - analytic) / analytic < 0.01
+
+    def test_moe_active_params(self):
+        model = build(C.get("olmoe-1b-7b"), PEFTConfig(method="none"))
+        total, active = dl.backbone_params(model)
+        assert active < total             # top-8 of 64 experts
+        # expert fraction = 8/64
+        cfg = C.get("olmoe-1b-7b")
+        expert = cfg.num_layers * cfg.moe.num_experts * 3 * 2048 * 1024
+        assert abs((total - active) - expert * (1 - 8 / 64)) / total < 0.02
+
+    def test_model_flops_conventions(self):
+        model = build(C.get("yi-6b"), PEFTConfig(method="none"))
+        _, n = dl.backbone_params(model)
+        train = dl.model_flops(model, C.shape_for("train_4k"))
+        prefill = dl.model_flops(model, C.shape_for("prefill_32k"))
+        decode = dl.model_flops(model, C.shape_for("decode_32k"))
+        assert train == pytest.approx(6.0 * n * 256 * 4096)
+        assert prefill == pytest.approx(2.0 * n * 32 * 32768)
+        assert decode == pytest.approx(2.0 * n * 128)
+
+    def test_long_context_gate(self):
+        assert dl.long_context_skip(C.get("yi-6b"), C.shape_for("long_500k"))
+        assert not dl.long_context_skip(C.get("mamba2-2.7b"),
+                                        C.shape_for("long_500k"))
+        assert not dl.long_context_skip(C.get("yi-6b"),
+                                        C.shape_for("train_4k"))
+
+
+class TestRenderer:
+    def _row(self, **kw):
+        base = {
+            "arch": "yi-6b", "shape": "train_4k", "kind": "train",
+            "mesh": "16x16", "chips": 256, "variant": "baseline",
+            "flops_per_device": 1e14, "bytes_per_device": 1e12,
+            "collective_bytes_per_device": 1e11,
+            "collectives": {"all-reduce": 1e11},
+            "collective_counts": {"all-reduce": 10},
+            "terms": {"compute_s": 0.5, "memory_s": 1.2,
+                      "memory_s_upper": 3.0, "collective_s": 2.0},
+            "dominant": "collective_s", "model_flops": 3e16,
+            "useful_flops_ratio": 0.8, "roofline_fraction": 0.1,
+            "memory": {"argument_bytes": 1, "output_bytes": 1,
+                       "temp_bytes": 1, "alias_bytes": 0,
+                       "peak_estimate_bytes": 3, "fits_hbm": True},
+            "compile_seconds": 10.0,
+        }
+        base.update(kw)
+        return base
+
+    def test_render_includes_skips_and_sorts(self):
+        rows = [self._row(), self._row(arch="mamba2-2.7b")]
+        out = R.render(rows, "16x16", "baseline")
+        assert "| yi-6b | train_4k |" in out
+        assert "SKIP" in out                      # full-attn long_500k rows
+        assert out.count("SKIP") == 8
+        assert "0.1000" in out
+
+    def test_fmt(self):
+        assert R.fmt_s(2.0) == "2.00s"
+        assert R.fmt_s(0.0021) == "2.1ms"
+        assert R.fmt_s(5e-6) == "5us"
+
+    def test_real_artifacts_parse(self):
+        """The shipped dry-run JSONs load and render."""
+        rows = R.load("results/dryrun_baseline_v0")
+        assert len(rows) >= 60
+        out = R.render(rows, "16x16", "baseline")
+        assert len(out.splitlines()) >= 30
+        multi = [r for r in rows if r["mesh"] == "2x16x16"]
+        assert len(multi) == 32               # full multi-pod coverage

@@ -1,0 +1,150 @@
+"""Training-substrate tests: learning on synthetic tasks, microbatch
+equivalence, anomaly guard, schedules, optimizer, PEFT gradient filtering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.optim import adamw, schedules
+from repro.train import step as ts
+
+
+def _tiny_model(peft=None, **kw):
+    cfg = C.reduced(C.get("yi-6b")).replace(vocab=64, **kw)
+    return build(cfg, peft or PEFTConfig(n=32, alpha=10.0, train_head=True))
+
+
+class TestLearning:
+    def test_fourierft_loss_decreases(self):
+        model = _tiny_model()
+        tcfg = TrainConfig(learning_rate=2e-2, total_steps=50, warmup_steps=5)
+        state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+        step_fn = jax.jit(ts.make_train_step(model, tcfg))
+        data = SyntheticLM(vocab=64, batch=8, seq=32, task_seed=3)
+        losses = []
+        for i in range(50):
+            state, m = step_fn(state, frozen, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1
+
+    def test_only_adapters_receive_updates(self):
+        model = _tiny_model(peft=PEFTConfig(n=32, alpha=10.0))
+        tcfg = TrainConfig(total_steps=3)
+        state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+        step_fn = jax.jit(ts.make_train_step(model, tcfg))
+        data = SyntheticLM(vocab=64, batch=4, seq=16)
+        base_before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                                   frozen["base"])
+        c_before = {k: np.asarray(v["c"]).copy()
+                    for k, v in state["trainable"]["peft"].items()}
+        state, _ = step_fn(state, frozen, data.batch_at(0))
+        # frozen base untouched (it is an input, never written)
+        for (p1, l1), (p2, l2) in zip(
+                jax.tree_util.tree_leaves_with_path(base_before),
+                jax.tree_util.tree_leaves_with_path(frozen["base"])):
+            np.testing.assert_array_equal(l1, np.asarray(l2))
+        # adapter coefficients moved
+        for k, v in state["trainable"]["peft"].items():
+            assert not np.allclose(c_before[k], np.asarray(v["c"]))
+
+    def test_microbatch_equals_full_batch_gradients(self):
+        model = _tiny_model()
+        data = SyntheticLM(vocab=64, batch=8, seq=16)
+        batch = data.batch_at(0)
+        grads = {}
+        for k in (0, 4):
+            tcfg = TrainConfig(microbatch=k, grad_clip=1e9)
+            state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+            loss_f = ts._loss_for(model)
+            if k:
+                step = ts.make_train_step(model, tcfg)
+                # reach inside: compare accumulated loss via metrics
+                _, m = jax.jit(step)(state, frozen, batch)
+                grads[k] = float(m["loss"])
+            else:
+                grads[k] = float(loss_f(state["trainable"], frozen, batch))
+        assert abs(grads[0] - grads[4]) < 2e-3
+
+    def test_anomaly_guard_skips_bad_step(self):
+        model = _tiny_model()
+        tcfg = TrainConfig(anomaly_threshold=1e4)
+        state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+        step_fn = jax.jit(ts.make_train_step(model, tcfg))
+        data = SyntheticLM(vocab=64, batch=4, seq=16)
+        state, _ = step_fn(state, frozen, data.batch_at(0))
+        snap = jax.tree.map(np.asarray, state["trainable"])
+        # poison the batch -> non-finite loss
+        bad = {"tokens": data.batch_at(1)["tokens"],
+               "labels": data.batch_at(1)["labels"]}
+        poisoned_frozen = jax.tree.map(
+            lambda x: (x * np.nan if x.dtype in (jnp.bfloat16, jnp.float32)
+                       and x.ndim >= 2 else x), frozen)
+        state2, m = step_fn(state, poisoned_frozen, bad)
+        assert int(m["skipped"]) == 1
+        assert int(state2["anomalies"]) == 1
+        for a, b in zip(jax.tree.leaves(snap),
+                        jax.tree.leaves(state2["trainable"])):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+
+class TestOptim:
+    def test_adamw_matches_reference_scalar(self):
+        """One param, closed-form first step: update = -lr (bias-corrected)."""
+        cfg = TrainConfig(learning_rate=0.1, weight_decay=0.0)
+        p = {"w": jnp.array([2.0])}
+        g = {"w": jnp.array([0.5])}
+        opt = adamw.init(p)
+        p2, opt2 = adamw.update(g, opt, p, 0.1, cfg)
+        # m̂ = g, v̂ = g² -> step = g/|g| = 1 -> w' = 2 - 0.1
+        np.testing.assert_allclose(p2["w"], jnp.array([1.9]), atol=1e-4)
+
+    def test_weight_decay_decoupled(self):
+        cfg = TrainConfig(learning_rate=0.1, weight_decay=0.1)
+        p = {"w": jnp.array([1.0])}
+        g = {"w": jnp.array([0.0])}
+        opt = adamw.init(p)
+        p2, _ = adamw.update(g, opt, p, 0.1, cfg)
+        np.testing.assert_allclose(p2["w"], jnp.array([1.0 - 0.1 * 0.1 * 1.0]),
+                                   atol=1e-6)
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(norm, 10.0, atol=1e-5)
+        np.testing.assert_allclose(adamw.global_norm(clipped), 1.0, atol=1e-5)
+
+    def test_schedule_shapes(self):
+        cfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=110,
+                          schedule="linear")
+        np.testing.assert_allclose(float(schedules.lr_at(0, cfg)), 0.1)
+        np.testing.assert_allclose(float(schedules.lr_at(9, cfg)), 1.0)
+        assert float(schedules.lr_at(110, cfg)) < 1e-6
+        cfg2 = cfg.replace(schedule="cosine")
+        np.testing.assert_allclose(float(schedules.lr_at(60, cfg2)), 0.5,
+                                   atol=1e-2)
+
+
+class TestParamSplit:
+    def test_full_ft_trains_base(self):
+        model = _tiny_model(peft=PEFTConfig(method="full"))
+        tcfg = TrainConfig(total_steps=1)
+        state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+        assert "base" in state["trainable"]
+        step_fn = jax.jit(ts.make_train_step(model, tcfg))
+        data = SyntheticLM(vocab=64, batch=2, seq=16)
+        state, m = step_fn(state, frozen, data.batch_at(0))
+        assert np.isfinite(float(m["loss"]))
+
+    def test_trainable_counts(self):
+        for method, expect in [("fourierft", 32 * 2 * 2), ("lora", None)]:
+            model = _tiny_model(peft=PEFTConfig(method=method, n=32, lora_r=2))
+            tcfg = TrainConfig()
+            state, _ = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+            n = sum(int(np.prod(x.shape)) for x in
+                    jax.tree.leaves(state["trainable"]["peft"]))
+            if method == "fourierft":
+                assert n == 32 * model.cfg.num_layers * 2  # q and v sites
