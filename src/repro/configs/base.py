@@ -147,6 +147,8 @@ class TrainConfig:
     remat: str = "full"           # full | dots | none
     anomaly_threshold: float = 1e4
     seed: int = 0
+    # gradient all-reduce compression: none | int8_ef (dist/compression.py)
+    grad_compression: str = "none"
 
     def replace(self, **kw) -> "TrainConfig":
         return dataclasses.replace(self, **kw)

@@ -1,0 +1,16 @@
+"""Distributed-execution layer (DESIGN.md §Dist).
+
+Three pieces, deliberately decoupled from any model module:
+
+- `sharding`  — named-sharding rule engine mapping parameter / optimizer /
+                batch / KV-cache trees onto a (pod, data, model) mesh,
+                with optional FSDP over `data`.
+- `hlo`       — compiled-HLO analyzer: per-device flops / bytes / collective
+                traffic with full while/scan trip-count multiplicity (XLA's
+                own cost_analysis visits loop bodies once).
+- `compression` — int8 error-feedback gradient compression for the
+                cross-pod all-reduce (opt-in via TrainConfig.grad_compression).
+"""
+from repro.dist import compression, hlo, sharding
+
+__all__ = ["compression", "hlo", "sharding"]

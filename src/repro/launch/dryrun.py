@@ -6,7 +6,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 Lowers + compiles every (architecture × input shape) cell on the production
 meshes — (16, 16) single-pod and (2, 16, 16) multi-pod — with full sharding,
 printing memory_analysis() and cost_analysis() and writing per-cell JSON for
-the roofline report (EXPERIMENTS.md §Dry-run / §Roofline).
+the roofline report (DESIGN.md §9; render with repro.launch.roofline).
 
 Usage:
     python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single

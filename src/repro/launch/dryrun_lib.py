@@ -68,7 +68,7 @@ def make_constrain(mesh: Mesh, cfg: ModelConfig, fsdp: bool = False):
     # (same bytes), and norms run on S/16 shards.
     # scoped to qwen2-vl-72b: smaller archs fit without SP, and GSPMD-auto
     # SP costs extra reshard collectives (proper manual SP via shard_map is
-    # the identified next step; see EXPERIMENTS §Perf cell notes)
+    # the identified next step; see DESIGN.md §Dist)
     seq_parallel = cfg.d_model >= 8000
 
     def constrain(path: str, x):
@@ -254,6 +254,8 @@ def analyze(cell: Cell, lowered, compiled, mesh: Mesh,
             compile_seconds: float) -> Dict:
     chips = mesh.devices.size
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax ≤ 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     # NOTE: XLA's cost_analysis visits while bodies once (no trip-count
     # scaling) -- useless for scanned programs. We re-derive from the HLO
@@ -329,10 +331,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: bool = False) -> Dict:
     """mesh_shape: optional "DxM" remap of the same chips (perf variants);
     the required dry-run meshes stay (16,16) / (2,16,16)."""
-    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.launch.mesh import (
+        make_mesh, make_production_mesh, parse_mesh_shape)
     if mesh_shape:
-        dims = tuple(int(x) for x in mesh_shape.split("x"))
-        axes = ("pod", "data", "model")[-len(dims):]
+        dims, axes = parse_mesh_shape(mesh_shape)
         mesh = make_mesh(dims, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

@@ -1,27 +1,57 @@
-"""Production meshes. Function (not module-level constant) so importing never
-touches jax device state; the dry-run sets XLA_FLAGS before any jax import.
+"""Mesh construction — the ONE shared path for every launcher (train, serve,
+dryrun, tests). Functions (not module-level constants) so importing never
+touches jax device state; the dry-run sets XLA_FLAGS for 512 host devices
+before any jax import.
+
+Version compat: `axis_types=(AxisType.Auto, …)` keeps GSPMD auto-propagation
+explicit on new jax; jax ≤ 0.4.x predates the kwarg (Auto is the only
+behavior), so we pass it only when the installed jax supports it.
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+
+
+def _axis_type_kwargs(n: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    try:
+        import inspect
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            return {}
+    except (TypeError, ValueError):
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_type_kwargs(len(tuple(axes))))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def parse_mesh_shape(spec: str) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """'4x2' -> ((4, 2), ('data', 'model')); a 3-dim spec adds 'pod'."""
+    dims = tuple(int(x) for x in spec.split("x"))
+    if not 1 <= len(dims) <= 3:
+        raise ValueError(f"mesh spec {spec!r}: want 1-3 'x'-separated dims")
+    axes = ("pod", "data", "model")[-len(dims):]
+    return dims, axes
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = jax.device_count()
+    if n % model:
+        raise ValueError(f"model parallelism {model} does not divide "
+                         f"device count {n}")
     data = n // model
     return make_mesh((data, model), ("data", "model"))

@@ -1,7 +1,8 @@
-"""Roofline report: renders the per-cell dry-run JSONs into the
-EXPERIMENTS.md §Dry-run / §Roofline tables.
+"""Roofline report: renders the per-cell dry-run JSONs into the DESIGN.md §9
+roofline / dry-run tables.
 
-Usage: python -m repro.launch.roofline --dir results/dryrun [--mesh single]
+Usage: python -m repro.launch.roofline --dir results/dryrun_baseline_v0
+           [--mesh 16x16] [--variant baseline] [--summary]
 """
 from __future__ import annotations
 
@@ -111,12 +112,19 @@ def dominant_summary(rows: List[Dict], mesh: str) -> str:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="results/dryrun")
-    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dir", default="results/dryrun_baseline_v0")
+    ap.add_argument("--mesh", default="16x16",
+                    help="mesh tag to filter rows by (see launch/mesh.py "
+                         "parse_mesh_shape for the DxM spec format)")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--summary", action="store_true",
+                    help="also print the per-cell dominant-term summary")
     args = ap.parse_args()
     rows = load(args.dir)
     print(render(rows, args.mesh, args.variant))
+    if args.summary:
+        print()
+        print(dominant_summary(rows, args.mesh))
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import repro.configs as configs
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import PEFTConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.serve import Engine
 from repro.train.step import join_params
@@ -35,6 +36,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="TP axis size; remaining devices replicate/batch")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -50,7 +53,9 @@ def main(argv=None):
             .split_params(model, params)
         params = join_params(model, trainable, frozen)
         print(f"loaded adapters from step {at}")
-    engine = Engine(model, params, batch_slots=2, max_len=args.max_len)
+    mesh = make_host_mesh(model=args.model_parallel)
+    engine = Engine(model, params, batch_slots=2, max_len=args.max_len,
+                    mesh=mesh)
     prompts = [jnp.arange(6, dtype=jnp.int32) % cfg.vocab,
                (jnp.arange(4, dtype=jnp.int32) + 3) % cfg.vocab]
     if cfg.n_codebooks:

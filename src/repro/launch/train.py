@@ -19,6 +19,7 @@ import jax
 import repro.configs as configs
 from repro.configs.base import PEFTConfig, TrainConfig
 from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.train import loop, step as train_step
 
@@ -46,6 +47,14 @@ def main(argv=None):
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--task-seed", type=int, default=7)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="TP axis size; remaining devices form `data`")
+    ap.add_argument("--fsdp", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="--fsdp forces FSDP on, --no-fsdp off; default "
+                         "auto per dist.sharding.fsdp_default")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -56,19 +65,30 @@ def main(argv=None):
     model = build(cfg, peft, remat=args.remat)
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1),
-                       microbatch=args.microbatch, seed=args.seed)
+                       microbatch=args.microbatch, seed=args.seed,
+                       grad_compression=args.grad_compression)
+    # everything routes through the mesh path: a 1x1 host mesh degenerates to
+    # the single-device behavior, larger device counts shard for free
+    mesh = make_host_mesh(model=args.model_parallel)
     print(f"arch={cfg.name} method={args.method} "
+          f"mesh={'x'.join(map(str, mesh.devices.shape))} "
           f"trainable={model.trainable_params():,}")
     state, frozen = train_step.init_state(model, tcfg,
                                           jax.random.PRNGKey(args.seed))
-    step_fn = jax.jit(train_step.make_train_step(model, tcfg))
+    fsdp = args.fsdp                       # None = auto
     data = SyntheticLM(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
                        seed=args.seed, task_seed=args.task_seed,
                        codebooks=cfg.n_codebooks)
+    state, frozen, state_sh, frozen_sh = train_step.shard_train_state(
+        model, state, frozen, mesh, fsdp=fsdp)
+    step_fn, batch_sh = train_step.make_sharded_train_step(
+        model, tcfg, mesh, state, frozen, data.batch_at(0),
+        shardings=(state_sh, frozen_sh))
     state, report = loop.run(
         step_fn, state, frozen, data, tcfg, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
-        resume=not args.no_resume, log_every=max(args.steps // 20, 1))
+        resume=not args.no_resume, log_every=max(args.steps // 20, 1),
+        mesh=mesh, batch_sharding=batch_sh, state_sharding=state_sh)
     print(f"done: steps={report.steps_run} final_loss={report.final_loss:.4f} "
           f"anomalies={report.anomalies} slow_steps={report.slow_steps}"
           + (f" (resumed from {report.resumed_from})"

@@ -6,7 +6,7 @@ B/C groups (n_groups=1) are replicated (small: 2·n_groups·state per token).
 
 Layout: x (B, S, H, P) with H = expand·d_model / head_dim, P = head_dim.
 Separate projections (wz/wx/wbc/wdt) instead of one fused in_proj so each gets
-the TP-correct sharding (see DESIGN §7).
+the TP-correct sharding (see DESIGN.md §Dist).
 """
 from __future__ import annotations
 
@@ -221,7 +221,9 @@ def mamba_decode_step(p: Dict, cache: Dict, x: jax.Array, cfg: ModelConfig,
     conv_out = jnp.einsum("bwc,cw->bc", hist.astype(jnp.float32),
                           p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
     conv_out = jax.nn.silu(conv_out).astype(x.dtype)
-    new_conv = hist[:, 1:, :]
+    # keep the cache dtype: concat promotes when compute dtype differs, and
+    # scan carries (registry prefill) require a dtype-invariant cache
+    new_conv = hist[:, 1:, :].astype(cache["conv"].dtype)
     xin = conv_out[..., :d_inner].reshape(B, H, P)
     bc = conv_out[..., d_inner:]
     Bmat = bc[..., :G * ssm.state].reshape(B, G, ssm.state)

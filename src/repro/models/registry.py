@@ -24,6 +24,13 @@ from repro.core.peft import AdapterSite
 from repro.models import mamba2, ssm_lm, transformer, zamba2
 
 
+def add_time_dim(t: jax.Array) -> jax.Array:
+    """Re-add the time dim to per-step tokens: (B,) -> (B, 1); codebook
+    tokens (B, CB) -> (B, 1, CB). Shared by Model.prefill and the serve
+    engine's decode loop so the two paths cannot diverge."""
+    return t[:, None] if t.ndim == 1 else t[:, None, :]
+
+
 def default_targets(cfg: ModelConfig) -> Tuple[str, ...]:
     """Paper default: attention q/v. Attention-free family: in/out proj."""
     if cfg.family == "ssm":
@@ -121,6 +128,25 @@ class Model:
         return self._mod.decode_step(params["base"], params["peft"], cache,
                                      batch, self.cfg, self.peft, self.sites,
                                      constrain=self.constrain)
+
+    def prefill(self, params: Dict, cache: Dict, batch: Dict):
+        """Fill a fresh cache from a whole (B, S[, CB]) prompt in one call.
+        Transformer families run a parallel causal forward; recurrent
+        families (ssm/hybrid) scan the decode step over the prompt inside
+        one jittable graph. Returns (next_tokens, cache)."""
+        fn = getattr(self._mod, "prefill", None)
+        if fn is not None:
+            return fn(params["base"], params["peft"], cache, batch, self.cfg,
+                      self.peft, self.sites, constrain=self.constrain)
+        tokens = batch["tokens"]
+
+        def body(cache, tok):
+            nt, cache = self.decode_step(params, cache,
+                                         {"tokens": add_time_dim(tok)})
+            return cache, nt
+
+        cache, nts = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 1, 0))
+        return jax.tree.map(lambda a: a[-1], nts), cache
 
     # ---- abstract input specs (dry-run) -------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict:

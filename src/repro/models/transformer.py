@@ -184,7 +184,7 @@ def _attn_block(lp: Dict, x: jax.Array, cfg: ModelConfig, linear,
         k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
     if cache_kv is None:
         att = attn_mod.attention(q, k, v, causal=True)
-        new_kv = None
+        new_kv = (k, v)        # post-RoPE, as stored by the decode path
     else:
         ck, cv = cache_kv
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
@@ -262,6 +262,53 @@ def loss_fn(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
     if cfg.moe is not None:
         ce = ce + cfg.moe.aux_loss_weight * moe_aux
     return ce
+
+
+# ---------------------------------------------------------------------------
+# Prefill: one causal forward over the whole prompt that also populates the
+# KV cache — replaces token-by-token teacher-forced stepping in the serving
+# engine (S sequential decode dispatches -> one call, and attention runs
+# parallel over S instead of S times over a masked cache).
+# ---------------------------------------------------------------------------
+
+def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
+            cfg: ModelConfig, peft: PEFTConfig, sites,
+            constrain=None) -> Tuple[jax.Array, Dict]:
+    """Process a (B, S) prompt against a fresh cache (pos must be 0).
+    Returns (next_tokens after the last prompt token, cache at pos=S)."""
+    x = _embed(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    eff_layers, aux_consts = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain)
+    linear = make_linear(peft, aux_consts, constrain)
+
+    # cache lives in the scan carry and is written in place per layer —
+    # threading K/V through scan ys would materialize a second (L,B,S,K,hd)
+    # stack next to the cache (see decode_step's carry note: ~3x-cache peak)
+    def body(carry, lp_i):
+        x, ck_all, cv_all = carry
+        lp, li = lp_i
+        x, (k, v) = _attn_block(lp, x, cfg, linear, positions)
+        ck_all = jax.lax.dynamic_update_slice(
+            ck_all, k.astype(ck_all.dtype)[None], (li, 0, 0, 0, 0))
+        cv_all = jax.lax.dynamic_update_slice(
+            cv_all, v.astype(cv_all.dtype)[None], (li, 0, 0, 0, 0))
+        x, _ = _mlp_block(lp, x, cfg, linear, constrain)
+        return (x, ck_all, cv_all), None
+
+    (x, ck, cv), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (eff_layers, jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,cdv->bscv", x, params["lm_head"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return next_tokens, {"k": ck, "v": cv, "pos": cache["pos"] + S}
 
 
 # ---------------------------------------------------------------------------

@@ -15,9 +15,9 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PEFTConfig
+from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig
 from repro.core import peft as peft_mod
-from repro.models.registry import Model, build
+from repro.models.registry import Model, add_time_dim, build
 
 
 def merge_for_serving(model: Model, params: Dict) -> Tuple[Model, Dict]:
@@ -57,38 +57,66 @@ class Request:
 
 
 class Engine:
-    """Slot-based batched greedy decoding (tests/examples scale)."""
+    """Slot-based batched greedy decoding (tests/examples scale).
+
+    `mesh`: optional jax Mesh — merged params are placed per the dist
+    sharding rules (TP over `model`, replicated over batch axes) and the KV
+    cache per `cache_specs`, so the jitted prefill/decode graphs compile
+    SPMD-partitioned instead of replicated."""
 
     def __init__(self, model: Model, params: Dict, batch_slots: int,
-                 max_len: int, merge: bool = True):
+                 max_len: int, merge: bool = True, mesh=None):
         if merge:
             model, params = merge_for_serving(model, params)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist import sharding as shd
+            specs = shd.state_specs(params, mesh, model.cfg, False)
+            params = jax.device_put(params, shd.named(params, specs, mesh))
         self.model, self.params = model, params
         self.batch = batch_slots
         self.max_len = max_len
         self._decode = jax.jit(model.decode_step)
+        # one compiled graph per prompt length (padded batches share it)
+        self._prefill = jax.jit(model.prefill)
 
-    def generate(self, prompts: List[jax.Array], max_new: int = 16):
+    def _fresh_cache(self):
+        cache = self.model.init_cache(self.batch, self.max_len,
+                                      dtype=jnp.dtype(self.model.cfg.dtype))
+        if self.mesh is not None:
+            from repro.dist import sharding as shd
+            shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
+            specs = shd.cache_specs(cache, self.mesh, self.model.cfg, shape)
+            cache = jax.device_put(cache, shd.named(cache, specs, self.mesh))
+        return cache
+
+    def generate(self, prompts: List[jax.Array], max_new: int = 16,
+                 stepwise_prefill: bool = False):
         """Greedy-decode a batch of equal-priority prompts (padded to the
-        longest; per-slot prompt replay keeps the KV cache consistent)."""
+        longest; padded prefill keeps every slot's KV cache consistent).
+
+        stepwise_prefill: legacy token-by-token teacher-forced prefill
+        (reference path for the equivalence test; S decode dispatches)."""
         assert len(prompts) <= self.batch
         B = self.batch
         plen = max(int(p.shape[0]) for p in prompts)
-        toks = jnp.zeros((B, plen), jnp.int32)
+        toks = jnp.zeros((B, plen) + prompts[0].shape[1:], jnp.int32)
         for i, p in enumerate(prompts):
             toks = toks.at[i, :p.shape[0]].set(p)
-        cache = self.model.init_cache(B, self.max_len)
-        # prefill by stepping the prompt (teacher-forced)
-        last = None
-        for t in range(plen):
-            last, cache = self._decode(self.params, cache,
-                                       {"tokens": toks[:, t:t + 1]})
+        cache = self._fresh_cache()
+        if stepwise_prefill:
+            last = None
+            for t in range(plen):
+                last, cache = self._decode(self.params, cache,
+                                           {"tokens": toks[:, t:t + 1]})
+        else:
+            last, cache = self._prefill(self.params, cache, {"tokens": toks})
         outs = [last]
-        cur = last[:, None] if last.ndim == 1 else last
+        cur = add_time_dim(last)
         for _ in range(max_new - 1):
             nxt, cache = self._decode(self.params, cache,
                                       {"tokens": cur})
             outs.append(nxt)
-            cur = nxt[:, None] if nxt.ndim == 1 else nxt
+            cur = add_time_dim(nxt)
         gen = jnp.stack(outs, axis=1)                     # (B, max_new, ...)
         return [gen[i] for i in range(len(prompts))]

@@ -10,12 +10,14 @@ Data is step-keyed (stateless), so resume/elastic events replay nothing.
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import manager as ckpt
@@ -38,15 +40,27 @@ def run(train_step: Callable, state: Dict, frozen: Dict, data,
         ckpt_every: int = 0, keep: int = 3, resume: bool = True,
         log_every: int = 50, straggler_factor: float = 3.0,
         num_shards: int = 1, shard: int = 0,
+        mesh=None, batch_sharding=None, state_sharding=None,
         log_fn: Callable[[str], None] = print) -> tuple[Dict, LoopReport]:
+    """mesh / batch_sharding / state_sharding: mesh-aware mode (launch layer
+    passes the trees from train/step.py:make_sharded_train_step). Batches are
+    device_put onto `batch_sharding` before each step; checkpoint restores are
+    re-placed onto `state_sharding` (elastic resume onto a new mesh)."""
     report = LoopReport()
     mgr = None
     if ckpt_dir and ckpt_every:
         mgr = ckpt.CheckpointManager(ckpt_dir, keep=keep)
         if resume and ckpt.available_steps(ckpt_dir):
-            target = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
-            state, at = ckpt.restore(ckpt_dir, target=target)
+            raw, at = ckpt.restore(ckpt_dir)
+            # config toggles (e.g. grad_compression on/off) change the state
+            # skeleton: keep fresh subtrees the checkpoint lacks (EF residual
+            # restarts at zero), drop saved ones the config no longer carries
+            if isinstance(raw, dict) and isinstance(state, dict):
+                raw = {k: raw.get(k, state[k]) for k in state}
+            state = jax.tree.map(lambda x, a: jnp.asarray(a, x.dtype),
+                                 state, raw)
+            if state_sharding is not None:
+                state = jax.device_put(state, state_sharding)
             report.resumed_from = at
             log_fn(f"[loop] resumed from step {at}")
 
@@ -57,33 +71,38 @@ def run(train_step: Callable, state: Dict, frozen: Dict, data,
 
     old_handler = signal.signal(signal.SIGTERM, _on_term)
     ewma = None
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
     try:
         start = int(jax.device_get(state["step"]))
-        for step in range(start, tcfg.total_steps):
-            t0 = time.perf_counter()
-            batch = data.batch_at(step, shard=shard, num_shards=num_shards)
-            state, metrics = train_step(state, frozen, batch)
-            loss = float(jax.device_get(metrics["loss"]))
-            dt = time.perf_counter() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            if dt > straggler_factor * ewma and step > start + 5:
-                report.slow_steps += 1
-                log_fn(f"[loop] straggler step {step}: {dt:.3f}s vs "
-                       f"ewma {ewma:.3f}s")
-            report.losses.append(loss)
-            report.steps_run += 1
-            if log_every and step % log_every == 0:
-                log_fn(f"[loop] step {step} loss {loss:.4f} "
-                       f"({dt*1e3:.1f} ms)")
-            if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
-                mgr.save(step + 1, state)
-            if preempt["flag"]:
-                log_fn(f"[loop] SIGTERM at step {step}: checkpointing and "
-                       "exiting cleanly")
-                if mgr:
+        with ctx:
+            for step in range(start, tcfg.total_steps):
+                t0 = time.perf_counter()
+                batch = data.batch_at(step, shard=shard,
+                                      num_shards=num_shards)
+                if batch_sharding is not None:
+                    batch = jax.device_put(batch, batch_sharding)
+                state, metrics = train_step(state, frozen, batch)
+                loss = float(jax.device_get(metrics["loss"]))
+                dt = time.perf_counter() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > straggler_factor * ewma and step > start + 5:
+                    report.slow_steps += 1
+                    log_fn(f"[loop] straggler step {step}: {dt:.3f}s vs "
+                           f"ewma {ewma:.3f}s")
+                report.losses.append(loss)
+                report.steps_run += 1
+                if log_every and step % log_every == 0:
+                    log_fn(f"[loop] step {step} loss {loss:.4f} "
+                           f"({dt*1e3:.1f} ms)")
+                if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
                     mgr.save(step + 1, state)
-                report.preempted = True
-                break
+                if preempt["flag"]:
+                    log_fn(f"[loop] SIGTERM at step {step}: checkpointing "
+                           "and exiting cleanly")
+                    if mgr:
+                        mgr.save(step + 1, state)
+                    report.preempted = True
+                    break
         if mgr and report.steps_run and not report.preempted:
             mgr.save(int(jax.device_get(state["step"])), state)  # final state
         report.final_loss = report.losses[-1] if report.losses else float("nan")

@@ -61,16 +61,21 @@ def join_params(model: Model, trainable: Dict, frozen: Dict) -> Dict:
 
 
 def init_state(model: Model, tcfg: TrainConfig, rng: jax.Array) -> Tuple[Dict, Dict]:
-    """-> (state, frozen). state = {step, trainable, opt, loss_ema, anomalies}."""
+    """-> (state, frozen). state = {step, trainable, opt, loss_ema, anomalies}
+    (+ ef_residual when int8 error-feedback grad compression is on)."""
     params = model.init(rng)
     trainable, frozen = split_params(model, params)
-    return {
+    state = {
         "step": jnp.zeros((), jnp.int32),
         "trainable": trainable,
         "opt": adamw.init(trainable),
         "loss_ema": jnp.zeros((), jnp.float32),
         "anomalies": jnp.zeros((), jnp.int32),
-    }, frozen
+    }
+    if tcfg.grad_compression == "int8_ef":
+        from repro.dist import compression
+        state["ef_residual"] = compression.init_residual(trainable)
+    return state, frozen
 
 
 def _loss_for(model: Model):
@@ -113,8 +118,17 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
             return loss * scale, jax.tree.map(lambda g: g * scale, grads)
         return jax.value_and_grad(loss_f)(trainable, frozen, batch)
 
+    compress = tcfg.grad_compression == "int8_ef"
+    if compress:
+        from repro.dist import compression
+
     def train_step(state: Dict, frozen: Dict, batch: Dict):
         loss, grads = grads_of(state["trainable"], frozen, batch)
+        if compress:
+            # what the cross-pod all-reduce would transport: int8 + carried
+            # quantization residual (dist/compression.py)
+            grads, new_residual = compression.compress_with_feedback(
+                grads, state["ef_residual"])
         grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
         lr = schedules.lr_at(state["step"], tcfg)
         new_params, new_opt = adamw.update(grads, state["opt"],
@@ -123,7 +137,7 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
             | (loss > tcfg.anomaly_threshold)
         keep_old = lambda new, old: jax.tree.map(
             lambda n, o: jnp.where(bad, o, n), new, old)
-        state = {
+        state_out = {
             "step": state["step"] + 1,
             "trainable": keep_old(new_params, state["trainable"]),
             "opt": keep_old(new_opt, state["opt"]),
@@ -132,8 +146,64 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
                 0.99 * state["loss_ema"] + 0.01 * jnp.where(bad, state["loss_ema"], loss)),
             "anomalies": state["anomalies"] + bad.astype(jnp.int32),
         }
+        if compress:
+            state_out["ef_residual"] = keep_old(new_residual,
+                                                state["ef_residual"])
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
                    "skipped": bad.astype(jnp.int32)}
-        return state, metrics
+        return state_out, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Mesh placement (dist/sharding.py rules)
+# ---------------------------------------------------------------------------
+
+def shard_train_state(model: Model, state: Dict, frozen: Dict, mesh,
+                      fsdp: bool = None):
+    """Place (state, frozen) on `mesh` per the dist sharding rules.
+    Returns (state, frozen, state_sharding, frozen_sharding)."""
+    from repro.dist import sharding as shd
+    if fsdp is None:
+        fsdp = shd.fsdp_default(model.cfg, mesh)
+    st_sh = shd.named(state, shd.state_specs(state, mesh, model.cfg, fsdp),
+                      mesh)
+    fr_sh = shd.named(frozen, shd.state_specs(frozen, mesh, model.cfg, fsdp),
+                      mesh)
+    return (jax.device_put(state, st_sh), jax.device_put(frozen, fr_sh),
+            st_sh, fr_sh)
+
+
+def make_sharded_train_step(model: Model, tcfg: TrainConfig, mesh,
+                            state: Dict, frozen: Dict, batch_example: Dict,
+                            fsdp: bool = None, shardings=None):
+    """jit the train step with explicit mesh shardings and donated state.
+    `batch_example` may be real arrays or ShapeDtypeStructs; its leading dim
+    is the global batch. `shardings`: the (state_sharding, frozen_sharding)
+    pair from shard_train_state — pass it so placement and jit in_shardings
+    share one source of truth (recomputed from `fsdp` only when absent).
+    Returns (jitted_step, batch_sharding) — feed batches through
+    `jax.device_put(batch, batch_sharding)` (train/loop.py does this when
+    given `batch_sharding`)."""
+    from repro.configs.base import ShapeConfig
+    from repro.dist import sharding as shd
+    if shardings is not None:
+        st_sh, fr_sh = shardings
+    else:
+        if fsdp is None:
+            fsdp = shd.fsdp_default(model.cfg, mesh)
+        st_sh = shd.named(state,
+                          shd.state_specs(state, mesh, model.cfg, fsdp), mesh)
+        fr_sh = shd.named(frozen,
+                          shd.state_specs(frozen, mesh, model.cfg, fsdp),
+                          mesh)
+    ref = batch_example.get("tokens", batch_example.get("embeds"))
+    shape = ShapeConfig("runtime", int(ref.shape[1]), int(ref.shape[0]),
+                        "train")
+    b_sh = shd.named(batch_example,
+                     shd.batch_specs(batch_example, mesh, shape), mesh)
+    step = make_train_step(model, tcfg)
+    jitted = jax.jit(step, in_shardings=(st_sh, fr_sh, b_sh),
+                     donate_argnums=(0,))
+    return jitted, b_sh

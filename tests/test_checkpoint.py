@@ -134,8 +134,8 @@ import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import manager as ckpt
-mesh = jax.make_mesh((%(ndev)d,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh   # version-guarded axis_types
+mesh = make_mesh((%(ndev)d,), ("model",))
 w = jnp.arange(64.0).reshape(8, 8)
 sharded = jax.device_put(w, NamedSharding(mesh, P(None, "model")))
 if "%(mode)s" == "save":
