@@ -1,0 +1,71 @@
+"""Adapter-bank serving cost: decode throughput with 1/8/64 resident
+factored adapters vs the single-merged baseline (the paper's zero-latency
+deployment). The bank's per-step overhead is the row gather plus a few
+rank-2n einsums per adapted site — flat in the number of residents K
+(the gather indexes rows; K only grows HBM residency), which is the whole
+point: one graph serves a heterogeneous fleet of tenants."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig
+from repro.core import peft as peft_mod
+from repro.models import build
+from repro.serve import AdapterBank, Engine
+from benchmarks.common import emit
+
+BATCH = 8
+MAX_LEN = 64
+STEPS = 30
+
+
+def _decode_us(engine, params, extra):
+    cache = engine._fresh_cache()
+    toks = jnp.ones((BATCH, 1), jnp.int32)
+    nt, cache = engine._decode(params, cache, {"tokens": toks, **extra})
+    jax.block_until_ready(nt)                                  # compile
+    t0 = time.perf_counter()
+    cur = toks
+    for _ in range(STEPS):
+        nt, cache = engine._decode(params, cache, {"tokens": cur, **extra})
+        cur = nt[:, None]
+    jax.block_until_ready(nt)
+    return (time.perf_counter() - t0) * 1e6 / STEPS
+
+
+def main():
+    cfg = C.reduced(C.get("yi-6b")).replace(vocab=256)
+    prof = PEFTConfig(method="fourierft", n=64, alpha=25.0,
+                      param_dtype="float32")
+    model = build(cfg, prof)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # baseline: one tenant merged into the base (zero added latency)
+    merged = Engine(model, params, batch_slots=BATCH, max_len=MAX_LEN)
+    base_us = _decode_us(merged, merged.params, {})
+    emit("adapter_bank/merged_baseline", base_us,
+         f"batch={BATCH};tok_s={BATCH * 1e6 / base_us:.0f}")
+
+    base_model = build(cfg, PEFTConfig(method="none"))
+    base_params = base_model.init(jax.random.PRNGKey(0))
+    for k in (1, 8, 64):
+        bank = AdapterBank(base_model, {"fourierft": prof}, capacity=k)
+        for i in range(k):
+            tree = peft_mod.init_adapters(jax.random.PRNGKey(i),
+                                          base_model.sites, prof)
+            bank.load(f"tenant-{i}", tree, prof)
+        eng = Engine(base_model, base_params, batch_slots=BATCH,
+                     max_len=MAX_LEN, bank=bank)
+        ids = [f"tenant-{i % k}" for i in range(BATCH)]
+        extra = {"adapter_slots": bank.slot_rows(ids, BATCH)}
+        bank_params = {**eng.params, "bank": bank.params}
+        us = _decode_us(eng, bank_params, extra)
+        emit(f"adapter_bank/resident_{k}", us,
+             f"batch={BATCH};tok_s={BATCH * 1e6 / us:.0f};"
+             f"vs_merged={us / base_us:.3f}")
+
+
+if __name__ == "__main__":
+    main()

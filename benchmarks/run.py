@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_fig6_curve",
     "benchmarks.bench_kernels",
     "benchmarks.bench_grad_comm",
+    "benchmarks.bench_adapter_bank",
 ]
 
 

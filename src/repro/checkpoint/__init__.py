@@ -1,1 +1,1 @@
-from repro.checkpoint import manager
+from repro.checkpoint import adapters, manager

@@ -1,0 +1,130 @@
+"""Portable adapter-only checkpoints (the paper's storage claim, on disk).
+
+One tenant = one `<dir>/<adapter_id>/` holding exactly the trainable leaves
+(`adapter.npz`) plus a JSON manifest carrying the PEFTConfig. Frozen state
+(FourierFT/DCT spectral entries, ablation bases) is NOT stored — it is keyed
+by method + entry seed and regenerates deterministically at import via the
+method's `init_site`, so a FourierFT tenant really is n·(2+L) numbers on the
+wire (paper §3.2). The serving AdapterBank's LRU reload path goes through
+`import_adapter`.
+
+Export is atomic (tmp + os.replace), mirroring checkpoint/manager.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import tempfile
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
+from repro.core.adapter import AdapterSite
+
+_MANIFEST = "manifest.json"
+_LEAVES = "adapter.npz"
+_SEP = "::"          # site names contain "/", npz keys are "<site>::<leaf>"
+
+# ids become directory names: one path component, no traversal, and no
+# ".tmp-" (reserved for in-flight exports, filtered by list_adapters)
+_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+def _check_id(adapter_id: str) -> str:
+    if not _ID_RE.match(adapter_id) or ".tmp-" in adapter_id:
+        raise ValueError(
+            f"bad adapter_id {adapter_id!r}: must match {_ID_RE.pattern} "
+            "and not contain '.tmp-'")
+    return adapter_id
+
+
+def export_adapter(directory: str, adapter_id: str, adapters: Dict,
+                   peft: PEFTConfig) -> str:
+    """Write `<directory>/<adapter_id>/` from a {site: {leaf: array}} tree.
+    Only the method's trainable leaves are stored; frozen aux present in the
+    tree is dropped (regenerable from the manifest's method + entry seed)."""
+    _check_id(adapter_id)
+    method = adapter_api.resolve(peft.method)
+    trainable = set(method.trainable_leaves(peft))
+    arrays = {}
+    for site, tree in adapters.items():
+        for leaf, v in tree.items():
+            if leaf in trainable:
+                arrays[f"{site}{_SEP}{leaf}"] = np.asarray(jax.device_get(v))
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, adapter_id)
+    tmp = tempfile.mkdtemp(prefix=f"{adapter_id}.tmp-", dir=directory)
+    try:
+        np.savez(os.path.join(tmp, _LEAVES), **arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump({"adapter_id": adapter_id, "format": 1,
+                       "peft": dataclasses.asdict(peft)}, f)
+        if os.path.exists(final):
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        import shutil
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def _peft_from_manifest(d: Dict) -> PEFTConfig:
+    d = dict(d)
+    d["target_modules"] = tuple(d.get("target_modules", ("wq", "wv")))
+    return PEFTConfig(**d)
+
+
+def read_manifest(directory: str, adapter_id: str) -> PEFTConfig:
+    """PEFTConfig of an export without touching its arrays (cheap profile
+    discovery over large tenant directories)."""
+    path = os.path.join(directory, _check_id(adapter_id), _MANIFEST)
+    with open(path) as f:
+        return _peft_from_manifest(json.load(f)["peft"])
+
+
+def import_adapter(directory: str, adapter_id: str,
+                   sites: Optional[Sequence[AdapterSite]] = None,
+                   ) -> Tuple[Dict, PEFTConfig]:
+    """-> ({site: {leaf: array}}, PEFTConfig). With `sites`, frozen aux leaves
+    (entries / bases) are regenerated per site so the tree is directly usable
+    as params["peft"]; without, only the stored trainables are returned (the
+    AdapterBank path — its groups already hold the shared aux)."""
+    path = os.path.join(directory, _check_id(adapter_id))
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    peft = _peft_from_manifest(manifest["peft"])
+    method = adapter_api.resolve(peft.method)
+    out: Dict[str, Dict] = {}
+    with np.load(os.path.join(path, _LEAVES)) as z:
+        for key in z.files:
+            site, leaf = key.rsplit(_SEP, 1)
+            out.setdefault(site, {})[leaf] = jax.numpy.asarray(z[key])
+    if sites is not None:
+        trainable = set(method.trainable_leaves(peft))
+        by_name = {s.name: s for s in sites}
+        for site_name, tree in out.items():
+            ref = method.init_site(jax.random.PRNGKey(0), by_name[site_name],
+                                   peft)
+            for leaf, v in ref.items():
+                if leaf not in trainable:
+                    tree[leaf] = v
+    return out, peft
+
+
+def list_adapters(directory: str) -> Tuple[str, ...]:
+    if not os.path.isdir(directory):
+        return ()
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if ".tmp-" in name:
+            continue
+        if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+            out.append(name)
+    return tuple(out)

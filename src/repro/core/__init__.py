@@ -1,4 +1,5 @@
-from repro.core import basis, fourierft, lora, peft
+from repro.core import adapter, basis, fourierft, lora, peft
+from repro.core.adapter import AdapterMethod, register, registered_methods, resolve
 from repro.core.fourierft import (
     factored_apply, fourier_bases, materialize_delta, sample_entries,
 )

@@ -89,14 +89,14 @@ def sample_entries(d1: int, d2: int, n: int, seed: int = 2024, *,
 # ---------------------------------------------------------------------------
 
 def fourier_angles(entries: jax.Array, d1: int, d2: int):
-    """θ (d1, n) and φ (d2, n) phase grids for the selected entries."""
+    """Phase grids for the selected entries: θ[j,l] = 2π·j·u_l/d1 (d1, n)
+    and φ[k,l] = 2π·k·v_l/d2 (d2, n)."""
     u = entries[0].astype(jnp.float32)   # (n,)
     v = entries[1].astype(jnp.float32)
     j = jnp.arange(d1, dtype=jnp.float32)[:, None]
-    k = jnp.arange(d2, dtype=jnp.float32)[None, :]  # note: built as (d2, n) below
-    theta = (TWO_PI / d1) * (j * u[None, :])         # (d1, n)
-    phi = (TWO_PI / d2) * (jnp.arange(d2, dtype=jnp.float32)[:, None] * v[None, :])
-    del k
+    k = jnp.arange(d2, dtype=jnp.float32)[:, None]
+    theta = (TWO_PI / d1) * (j * u[None, :])
+    phi = (TWO_PI / d2) * (k * v[None, :])
     return theta, phi
 
 

@@ -1,104 +1,57 @@
 """PEFT attachment layer: adapter initialization, parameter accounting
-(paper Table 1), merging, and the per-site machinery shared by FourierFT,
-LoRA, and the basis ablations.
+(paper Table 1), and the per-site trees shared by every registered
+`AdapterMethod` (core/adapter.py).
 
 A model advertises its adaptable 2-D weight matrices as `AdapterSite`s
 (name, d_in, d_out, stack). Adapter params live in a tree parallel to the base
 params: params = {"base": ..., "peft": {site.name: {...}}}. Only "peft" (plus
 optionally the head) receives gradients — XLA then dead-code-eliminates every
 frozen-weight gradient GEMM.
+
+Method-specific math lives behind the `AdapterMethod` protocol; the functions
+here are site-tree plumbing (target filtering, per-site RNG folding,
+accounting sums) and stay method-agnostic.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PEFTConfig
-from repro.core import fourierft, lora, basis as basis_mod
-
-
-@dataclass(frozen=True)
-class AdapterSite:
-    name: str          # matches the stacked weight key in base params
-    d_in: int
-    d_out: int
-    stack: int         # number of layers stacked on axis 0 (scan-over-layers)
-
-
-def entry_seed_for(peft: PEFTConfig, site: AdapterSite) -> int:
-    """Paper: one shared seed (2024) for all layers. Distinct (d1, d2) grids
-    cannot share integer entries, so the seed is offset per site shape only
-    when shapes differ; equal-shaped sites share entries exactly as the paper
-    prescribes."""
-    return peft.entry_seed + hash((site.d_in, site.d_out)) % 1000
+from repro.core import adapter as adapter_api
+from repro.core.adapter import AdapterSite, entry_seed_for  # noqa: F401 (re-export)
 
 
 def init_site(rng: jax.Array, site: AdapterSite, peft: PEFTConfig) -> Dict:
-    dtype = jnp.dtype(peft.param_dtype)
-    if peft.method == "fourierft":
-        if peft.basis == "fourier":
-            entries = fourierft.sample_entries(
-                site.d_in, site.d_out, peft.n, entry_seed_for(peft, site),
-                freq_bias=peft.freq_bias, fc=peft.fc, bandwidth=peft.bandwidth)
-            aux = {"entries": entries}
-        else:
-            b1, b2 = basis_mod.make_basis(
-                jax.random.fold_in(jax.random.PRNGKey(peft.entry_seed),
-                                   site.d_in * 131071 + site.d_out),
-                peft.basis, site.d_in, site.d_out, peft.n)
-            aux = {"b1": b1, "b2": b2}
-        c = jax.random.normal(rng, (site.stack, peft.n), dtype)
-        return {"c": c, **aux}
-    if peft.method == "lora":
-        return lora.init_lora(rng, site.d_in, site.d_out, peft.lora_r,
-                              stack=site.stack, dtype=dtype)
-    if peft.method == "bitfit":
-        return {"delta_b": jnp.zeros((site.stack, site.d_out), dtype)}
-    raise ValueError(f"no per-site params for method {peft.method!r}")
+    return adapter_api.resolve(peft.method).init_site(rng, site, peft)
 
 
 def init_adapters(rng: jax.Array, sites: Sequence[AdapterSite],
                   peft: PEFTConfig) -> Dict:
-    if peft.method in ("none", "full"):
+    method = adapter_api.resolve(peft.method)
+    if not method.has_site_params:
         return {}
     out = {}
     for i, site in enumerate(sites):
         if site.name.split("/")[-1] not in peft.target_modules:
             continue
-        out[site.name] = init_site(jax.random.fold_in(rng, i), site, peft)
+        out[site.name] = method.init_site(jax.random.fold_in(rng, i), site,
+                                          peft)
     return out
 
 
 def site_delta(adapter: Dict, site: AdapterSite, peft: PEFTConfig,
                out_dtype) -> jax.Array:
     """Materialize the stacked ΔW (stack, d_in, d_out) for one site."""
-    if peft.method == "fourierft":
-        if peft.basis == "fourier":
-            return fourierft.materialize_delta(
-                adapter["c"], adapter["entries"], site.d_in, site.d_out,
-                peft.alpha, out_dtype=out_dtype)
-        return basis_mod.materialize_delta_basis(
-            adapter["c"], adapter["b1"], adapter["b2"], peft.basis,
-            peft.alpha, out_dtype=out_dtype)
-    if peft.method == "lora":
-        return lora.lora_delta(adapter["lora_a"], adapter["lora_b"],
-                               peft.lora_alpha, peft.lora_r,
-                               out_dtype=out_dtype)
-    raise ValueError(peft.method)
-
-
-def adapter_frozen_leaves(peft: PEFTConfig) -> tuple:
-    """Leaf names inside adapter dicts that are frozen (not trained)."""
-    return ("entries", "b1", "b2")
+    return adapter_api.resolve(peft.method).site_delta(adapter, site, peft,
+                                                       out_dtype)
 
 
 def trainable_adapter_tree(adapters: Dict, peft: PEFTConfig) -> Dict:
-    frozen = adapter_frozen_leaves(peft)
+    trainable = set(adapter_api.resolve(peft.method).trainable_leaves(peft))
     return {
-        site: {k: v for k, v in d.items() if k not in frozen}
+        site: {k: v for k, v in d.items() if k in trainable}
         for site, d in adapters.items()
     }
 
@@ -107,33 +60,27 @@ def trainable_adapter_tree(adapters: Dict, peft: PEFTConfig) -> Dict:
 # Parameter accounting (paper Table 1 / §3.2)
 # ---------------------------------------------------------------------------
 
+def _targeted(sites: Sequence[AdapterSite],
+              peft: PEFTConfig) -> List[AdapterSite]:
+    return [s for s in sites
+            if s.name.split("/")[-1] in peft.target_modules]
+
+
 def count_trainable(sites: Sequence[AdapterSite], peft: PEFTConfig) -> int:
     """|Θ| per paper §3.2 — coefficient parameters only (entries are stored,
     not trained; the paper counts n·L_t for FourierFT, 2·d·L_t·r for LoRA)."""
-    total = 0
-    for site in sites:
-        if site.name.split("/")[-1] not in peft.target_modules:
-            continue
-        if peft.method == "fourierft":
-            total += peft.n * site.stack
-        elif peft.method == "lora":
-            total += peft.lora_r * (site.d_in + site.d_out) * site.stack
-        elif peft.method == "bitfit":
-            total += site.d_out * site.stack
-    return total
+    method = adapter_api.resolve(peft.method)
+    return sum(method.count_trainable(s, peft) for s in _targeted(sites, peft))
 
 
 def storage_bytes(sites: Sequence[AdapterSite], peft: PEFTConfig,
                   bytes_per_param: int = 4) -> int:
-    """Checkpoint bytes: FourierFT additionally stores the 2n integer entries
-    once per shape group (paper: n·(2+L) numbers total)."""
-    n_params = count_trainable(sites, peft)
-    extra = 0
-    if peft.method == "fourierft" and peft.basis == "fourier":
-        shapes = {(s.d_in, s.d_out) for s in sites
-                  if s.name.split("/")[-1] in peft.target_modules}
-        extra = 2 * peft.n * len(shapes)
-    return (n_params + extra) * bytes_per_param
+    """Checkpoint bytes: trainables plus whatever frozen numbers the method
+    must carry (FourierFT: the 2n integer entries once per shape group —
+    paper: n·(2+L) numbers total)."""
+    method = adapter_api.resolve(peft.method)
+    extra = method.shared_storage_numbers(_targeted(sites, peft), peft)
+    return (count_trainable(sites, peft) + extra) * bytes_per_param
 
 
 def qv_sites_for(cfg: ModelConfig) -> List[AdapterSite]:

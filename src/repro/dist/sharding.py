@@ -22,7 +22,12 @@ so per-layer loop slices keep their spec):
     row-parallel (`model` on 2nd-to-last):    wo wo_mlp wo_ssm embed conv_w
     expert-parallel (`model` on expert dim):  we_i we_g we_o
     replicated:                               norms, router, A_log, dt_bias,
-                                              Dp, adapter leaves, scalars
+                                              Dp, adapter leaves
+                                              (c/entries/b1/b2/lora_*/kernel/
+                                              delta_b), scalars
+    (serving adapter-bank rows are spliced into params at generate() time as
+    uncommitted host arrays and rely on jit default placement — they do not
+    pass through this rule table)
 
 FSDP (opt-in, default from `fsdp_default`): additionally shards the largest
 free matrix dim of big weights over `data`; the launch layer re-gathers

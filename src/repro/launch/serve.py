@@ -1,12 +1,18 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
 
-Loads base weights (+ optional FourierFT adapter checkpoint), merges ΔW into
-the base (zero-latency serving, paper §3.1), and decodes a batch of demo
-prompts through the slot engine.
+Loads base weights (+ optional adapter checkpoint for ANY registered
+`AdapterMethod`), merges every mergeable ΔW into the base (zero-latency
+serving, paper §3.1), and decodes a batch of demo prompts through the slot
+engine. With `--bank-dir`, instead serves a multi-tenant adapter bank: every
+adapter-only export in the directory (checkpoint/adapters.py) is loaded
+resident and the demo prompts round-robin over the tenants in one
+heterogeneous batch.
 
 Laptop-scale demo:
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --adapters /tmp/ft   # dir written by repro.launch.train
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --bank-dir /tmp/tenants --bank-capacity 8
 """
 from __future__ import annotations
 
@@ -16,11 +22,13 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro.checkpoint import adapters as adapter_ckpt
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
-from repro.serve import Engine
+from repro.serve import AdapterBank, Engine
 from repro.train.step import join_params
 
 
@@ -28,11 +36,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--method", default="fourierft")
+    ap.add_argument("--method", default="fourierft",
+                    choices=adapter_api.registered_methods())
     ap.add_argument("--n", type=int, default=1000)
     ap.add_argument("--alpha", type=float, default=300.0)
     ap.add_argument("--adapters", default=None,
                     help="checkpoint dir from repro.launch.train")
+    ap.add_argument("--bank-dir", default=None,
+                    help="adapter-only export dir: serve a multi-tenant bank")
+    ap.add_argument("--bank-capacity", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -43,7 +55,12 @@ def main(argv=None):
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg).replace(vocab=min(cfg.vocab, 512))
-    peft = PEFTConfig(method=args.method, n=args.n, alpha=args.alpha)
+    # bank-only serving runs over the clean base: random-init adapters of a
+    # live method would otherwise be merged into it before the bank attaches
+    if args.bank_dir and not args.adapters:
+        peft = PEFTConfig(method="none")
+    else:
+        peft = PEFTConfig(method=args.method, n=args.n, alpha=args.alpha)
     model = build(cfg, peft)
     params = model.init(jax.random.PRNGKey(args.seed))
     if args.adapters:
@@ -54,15 +71,47 @@ def main(argv=None):
         params = join_params(model, trainable, frozen)
         print(f"loaded adapters from step {at}")
     mesh = make_host_mesh(model=args.model_parallel)
-    engine = Engine(model, params, batch_slots=2, max_len=args.max_len,
-                    mesh=mesh)
-    prompts = [jnp.arange(6, dtype=jnp.int32) % cfg.vocab,
-               (jnp.arange(4, dtype=jnp.int32) + 3) % cfg.vocab]
+
+    bank = None
+    tenant_ids = []
+    if args.bank_dir:
+        tenant_ids = list(adapter_ckpt.list_adapters(args.bank_dir))
+        if not tenant_ids:
+            raise SystemExit(f"no adapter exports under {args.bank_dir}")
+        profiles = {}
+        for tid in tenant_ids:
+            tp = adapter_ckpt.read_manifest(args.bank_dir, tid)
+            profiles.setdefault(tp.method, tp)
+        bank = AdapterBank(model, profiles, capacity=args.bank_capacity,
+                           checkpoint_dir=args.bank_dir)
+        for tid in tenant_ids:
+            if len(bank.resident_ids) >= args.bank_capacity:
+                break
+            try:
+                bank.load_from_checkpoint(tid)
+            except (ValueError, KeyError) as e:
+                # e.g. same method exported under a different n/seed than the
+                # group profile — serve the compatible tenants, don't die
+                print(f"skipping tenant {tid!r}: {e}")
+        if not bank.resident_ids:
+            raise SystemExit("no loadable tenants for the bank profiles")
+        tenant_ids = list(bank.resident_ids)   # demo serves residents only
+        print(f"bank: {len(tenant_ids)} resident tenants over "
+              f"groups {sorted(bank.profiles)}")
+
+    slots = max(2, len(tenant_ids)) if bank else 2
+    engine = Engine(model, params, batch_slots=slots, max_len=args.max_len,
+                    mesh=mesh, bank=bank)
+    prompts = [(jnp.arange(4 + i, dtype=jnp.int32) + 3 * i) % cfg.vocab
+               for i in range(slots)]
     if cfg.n_codebooks:
         prompts = [jnp.tile(p[:, None], (1, cfg.n_codebooks)) for p in prompts]
-    outs = engine.generate(prompts, max_new=args.max_new)
+    ids = [tenant_ids[i % len(tenant_ids)] if tenant_ids else None
+           for i in range(slots)] if bank else None
+    outs = engine.generate(prompts, max_new=args.max_new, adapter_ids=ids)
     for i, o in enumerate(outs):
-        print(f"prompt {i}: {o.tolist()}")
+        tag = f" [{ids[i]}]" if ids else ""
+        print(f"prompt {i}{tag}: {o.tolist()}")
 
 
 if __name__ == "__main__":

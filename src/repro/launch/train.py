@@ -18,6 +18,7 @@ import jax
 
 import repro.configs as configs
 from repro.configs.base import PEFTConfig, TrainConfig
+from repro.core import adapter as adapter_api
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
@@ -30,7 +31,7 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config (CPU-runnable)")
     ap.add_argument("--method", default="fourierft",
-                    choices=["fourierft", "lora", "bitfit", "full", "none"])
+                    choices=adapter_api.registered_methods())
     ap.add_argument("--n", type=int, default=1000)
     ap.add_argument("--alpha", type=float, default=300.0)
     ap.add_argument("--lora-r", type=int, default=8)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig
+from repro.core import adapter as adapter_api
 from repro.core import peft as peft_mod
 from repro.core.peft import AdapterSite
 from repro.models import mamba2, ssm_lm, transformer, zamba2
@@ -36,6 +37,15 @@ def default_targets(cfg: ModelConfig) -> Tuple[str, ...]:
     if cfg.family == "ssm":
         return ("wx", "wo_ssm")
     return ("wq", "wv")
+
+
+def resolve_default_targets(peft: PEFTConfig, cfg: ModelConfig) -> PEFTConfig:
+    """Swap the generic ("wq", "wv") default for the family's real targets —
+    the ONE place this special case lives (Model build and the serving
+    AdapterBank both normalize through it)."""
+    if peft.target_modules == ("wq", "wv") and cfg.family == "ssm":
+        return peft.replace(target_modules=default_targets(cfg))
+    return peft
 
 
 def adapter_sites(cfg: ModelConfig) -> Tuple[AdapterSite, ...]:
@@ -76,16 +86,26 @@ class Model:
     # optional sharding-constraint hook `f(param_path, x) -> x`, installed by
     # the launch layer (anchors merged W+ΔW stacks to the weight's spec)
     constrain: Optional[Callable] = None
+    # serving adapter bank: {method name: PEFTConfig profile} — static config
+    # closed over by the jitted graphs; the resident rows themselves travel
+    # as params["bank"] arrays (see serve/engine.py AdapterBank)
+    bank_profiles: Optional[Dict[str, PEFTConfig]] = None
 
     def __post_init__(self):
         self._mod = _FAMILY_MODULES[self.cfg.family]
-        if self.peft.method in ("fourierft", "lora", "bitfit"):
+        # resolve the method string exactly once, at model build — unknown
+        # names fail here, not deep inside a traced graph
+        self.method = adapter_api.resolve(self.peft.method)
+        if self.method.has_site_params:
             # resolve per-arch default targets if user kept the generic default
-            if (self.peft.target_modules == ("wq", "wv")
-                    and self.cfg.family in ("ssm",)):
-                self.peft = self.peft.replace(
-                    target_modules=default_targets(self.cfg))
+            self.peft = resolve_default_targets(self.peft, self.cfg)
         self.sites = adapter_sites(self.cfg)
+
+    def _bank_kwargs(self, params: Dict) -> Dict:
+        if self.bank_profiles is None:
+            return {}
+        return {"bank": params.get("bank"),
+                "bank_profiles": self.bank_profiles}
 
     # ---- params -----------------------------------------------------------
     def init(self, rng: jax.Array) -> Dict:
@@ -101,7 +121,8 @@ class Model:
     def forward(self, params: Dict, batch: Dict):
         return self._mod.forward(params["base"], params["peft"], batch,
                                  self.cfg, self.peft, self.sites,
-                                 remat=self.remat, constrain=self.constrain)
+                                 remat=self.remat, constrain=self.constrain,
+                                 **self._bank_kwargs(params))
 
     def loss(self, params: Dict, batch: Dict) -> jax.Array:
         return self._mod.loss_fn(params["base"], params["peft"], batch,
@@ -127,7 +148,8 @@ class Model:
     def decode_step(self, params: Dict, cache: Dict, batch: Dict):
         return self._mod.decode_step(params["base"], params["peft"], cache,
                                      batch, self.cfg, self.peft, self.sites,
-                                     constrain=self.constrain)
+                                     constrain=self.constrain,
+                                     **self._bank_kwargs(params))
 
     def prefill(self, params: Dict, cache: Dict, batch: Dict):
         """Fill a fresh cache from a whole (B, S[, CB]) prompt in one call.
@@ -137,12 +159,14 @@ class Model:
         fn = getattr(self._mod, "prefill", None)
         if fn is not None:
             return fn(params["base"], params["peft"], cache, batch, self.cfg,
-                      self.peft, self.sites, constrain=self.constrain)
+                      self.peft, self.sites, constrain=self.constrain,
+                      **self._bank_kwargs(params))
         tokens = batch["tokens"]
+        extra = {k: batch[k] for k in ("adapter_slots",) if k in batch}
 
         def body(cache, tok):
             nt, cache = self.decode_step(params, cache,
-                                         {"tokens": add_time_dim(tok)})
+                                         {"tokens": add_time_dim(tok), **extra})
             return cache, nt
 
         cache, nts = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 1, 0))
@@ -186,7 +210,7 @@ class Model:
 
     # ---- accounting ---------------------------------------------------------
     def trainable_params(self) -> int:
-        if self.peft.method == "full":
+        if self.method.trains_base:
             import numpy as _np
             shapes = jax.eval_shape(
                 lambda: self._mod.init_params(jax.random.PRNGKey(0), self.cfg))

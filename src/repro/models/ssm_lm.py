@@ -31,11 +31,14 @@ def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
 
 
 def forward(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
-            peft: PEFTConfig, sites, *, remat: str = "none", constrain=None):
+            peft: PEFTConfig, sites, *, remat: str = "none", constrain=None,
+            bank=None, bank_profiles=None):
     x = jnp.take(params["embed"], batch["tokens"], axis=0)
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
     act = (lambda t: constrain("act/hidden", t)) if constrain else (lambda t: t)
     x = act(x)
 
@@ -63,11 +66,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
-                cfg: ModelConfig, peft: PEFTConfig, sites, constrain=None):
+                cfg: ModelConfig, peft: PEFTConfig, sites, constrain=None,
+                bank=None, bank_profiles=None):
     x = jnp.take(params["embed"], batch["tokens"], axis=0)    # (B, 1, d)
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
 
     # caches in the scan carry (in-place per-layer update; see transformer.py)
     def body(carry, lp_i):

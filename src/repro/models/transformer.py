@@ -4,22 +4,25 @@
   depth; FourierFT coefficients stack naturally as (L, n)).
 - PEFT integration at the linear level: `merged` strategy swaps W for
   W + ΔW before the scan; `factored` threads per-layer adapter slices through
-  the scan and applies the rank-2n bypass inside each layer.
+  the scan and applies the method's factored bypass inside each layer. All
+  method math is behind the `AdapterMethod` protocol (core/adapter.py) — this
+  module never looks at `peft.method`.
+- serving adapter bank: per-request resident adapters are gathered ONCE per
+  call (outside the layer scan) and applied per slot via `bank_apply` (see
+  DESIGN.md §Adapter API).
 - decode path updates a stacked KV cache (L, B, Smax, K, hd).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PEFTConfig
-from repro.core import lora as lora_mod
-from repro.core import peft as peft_mod
-from repro.core.fourierft import factored_apply
-from repro.core.basis import basis_scale
+from repro.core import adapter as adapter_api
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.common import (
@@ -31,12 +34,25 @@ from repro.models.common import (
 # PEFT-aware linear
 # ---------------------------------------------------------------------------
 
-def make_linear(peft: PEFTConfig, aux_consts: Dict[str, Dict],
-                constrain=None):
-    """Returns linear(lp, name, x): y = x @ lp[name] + adapters.
+@dataclass(frozen=True)
+class SiteApp:
+    """One factored adapter application at a weight key: trainable leaves ride
+    the scanned layer tree under `{key}{tag}{leaf}`, frozen aux arrays are
+    captured here, and `banked` selects the row-batched `bank_apply` path."""
+    tag: str
+    method: adapter_api.AdapterMethod
+    aux: Dict = field(default_factory=dict)
+    peft: PEFTConfig = PEFTConfig()
+    banked: bool = False
 
-    Factored adapters appear in `lp` as `{name}__c` / `{name}__la`+`{name}__lb`
-    per-layer slices; frozen entry/basis constants come from aux_consts.
+
+def make_linear(apps: Dict[str, List[SiteApp]], constrain=None):
+    """Returns linear(lp, name, x): y = x @ lp[name] + bias + adapter apps.
+
+    Each `SiteApp` at `name` reads its trainable per-layer slices out of `lp`
+    (the scanned layer tree) and adds `method.factored_apply` — or
+    `method.bank_apply` for per-request resident adapters — to y, under the
+    app's own PEFTConfig (the global config has no say here).
     `constrain` (launch-layer hook) implements FSDP: weight slices stored
     `data`-sharded are all-gathered here, inside the layer loop, where the
     gather is loop-variant and cannot be hoisted into a full-stack gather."""
@@ -48,29 +64,38 @@ def make_linear(peft: PEFTConfig, aux_consts: Dict[str, Dict],
         y = jnp.einsum("...d,df->...f", x, w)
         if name + "__b" in lp:
             y = y + lp[name + "__b"].astype(y.dtype)
-        key_c = name + "__c"
-        if key_c in lp:
-            aux = aux_consts[name]
-            d1, d2 = w.shape
-            if "entries" in aux:
-                y = y + factored_apply(x, lp[key_c], aux["entries"], d1, d2,
-                                       peft.alpha).astype(y.dtype)
-            else:
-                scale = basis_scale(peft.basis, d1, d2, peft.alpha)
-                proj = (x.astype(jnp.float32) @ aux["b1"]) * lp[key_c].astype(jnp.float32)
-                y = y + (proj @ aux["b2"].T * scale).astype(y.dtype)
-        if name + "__la" in lp:
-            y = y + lora_mod.lora_apply(x, lp[name + "__la"], lp[name + "__lb"],
-                                        peft.lora_alpha, peft.lora_r).astype(y.dtype)
+        d1, d2 = w.shape
+        for app in apps.get(name, ()):
+            tr = {leaf: lp[name + app.tag + leaf]
+                  for leaf in app.method.trainable_leaves(app.peft)}
+            fn = app.method.bank_apply if app.banked \
+                else app.method.factored_apply
+            y = y + fn(x, tr, app.aux, d1, d2, app.peft).astype(y.dtype)
         return y
 
     return linear
 
 
+def _app_tag(kind: str, method_name: str) -> str:
+    return f"__{kind}.{method_name}__"
+
+
 def apply_peft_to_layers(layers: Dict, adapters: Dict, sites, peft: PEFTConfig,
-                         prefix: str = "layers/", constrain=None):
-    """Returns (eff_layers, aux_consts). merged: W <- W + ΔW. factored: add
-    per-layer adapter slices to the scanned tree (entries stay as constants).
+                         prefix: str = "layers/", constrain=None,
+                         bank: Optional[Dict] = None,
+                         bank_profiles: Optional[Dict[str, PEFTConfig]] = None,
+                         bank_slots: Optional[Dict] = None):
+    """Returns (eff_layers, apps). merged (and method.mergeable): the method
+    folds the site into the stacked tree (W <- W + ΔW; BitFit into the bias).
+    factored: trainable leaves join the scanned tree under tagged keys, frozen
+    aux stays constant, and `make_linear` applies the method inside each layer.
+
+    `bank`/`bank_profiles`/`bank_slots`: serving adapter bank — for each
+    method group, per-request rows are gathered from the (K+1, L, …) resident
+    leaves with `bank_slots[method]` (B,) ONCE here, outside the scan, and
+    enter the scanned tree as (L, B, …) leaves; row K is the reserved zero
+    row, so requests not using a method contribute exactly zero (methods are
+    linear in their trainables — see core/adapter.py).
 
     `constrain(path, x)`: optional sharding-constraint hook (set by the launch
     layer) pinning merged W+ΔW stacks to the weight's partition spec — without
@@ -78,30 +103,48 @@ def apply_peft_to_layers(layers: Dict, adapters: Dict, sites, peft: PEFTConfig,
     back to involuntary full rematerialization (measured: +15GB temps on
     yi-6b train_4k)."""
     eff = dict(layers)
-    aux_consts: Dict[str, Dict] = {}
+    apps: Dict[str, List[SiteApp]] = {}
+    method = adapter_api.resolve(peft.method)
     site_by_name = {s.name: s for s in sites}
     for full_name, ad in adapters.items():
         if not full_name.startswith(prefix):
             continue
         key = full_name[len(prefix):]
         site = site_by_name[full_name]
-        if peft.method == "bitfit":
-            bkey = key + "__b"
-            eff[bkey] = (eff[bkey] + ad["delta_b"]) if bkey in eff else ad["delta_b"]
+        if peft.strategy == "merged" and method.mergeable:
+            method.merge_site(eff, key, ad, site, peft, constrain=constrain,
+                              path=full_name)
             continue
-        if peft.strategy == "merged":
-            dw = peft_mod.site_delta(ad, site, peft, eff[key].dtype)
-            if constrain is not None:
-                dw = constrain(full_name, dw)
-            eff[key] = eff[key] + dw
-        else:
-            if peft.method == "fourierft":
-                eff[key + "__c"] = ad["c"]
-                aux_consts[key] = {k: v for k, v in ad.items() if k != "c"}
-            elif peft.method == "lora":
-                eff[key + "__la"] = ad["lora_a"]
-                eff[key + "__lb"] = ad["lora_b"]
-    return eff, aux_consts
+        tag = _app_tag("ad", method.name)
+        trainable = set(method.trainable_leaves(peft))
+        aux = {}
+        for leaf, v in ad.items():
+            if leaf in trainable:
+                eff[key + tag + leaf] = v
+            else:
+                aux[leaf] = v
+        apps.setdefault(key, []).append(SiteApp(tag, method, aux, peft))
+    if bank and bank_slots is None:
+        raise ValueError("adapter bank configured but the batch carries no "
+                         "'adapter_slots' (Engine.generate builds them; "
+                         "direct model calls must pass bank.slot_rows(...))")
+    for mname in sorted(bank or ()):
+        group = bank[mname]
+        m = adapter_api.resolve(mname)
+        prof = bank_profiles[mname]
+        slots = bank_slots[mname]                      # (B,) rows incl. zero
+        tag = _app_tag("bank", mname)
+        for full_name, leaves in group["sites"].items():
+            if not full_name.startswith(prefix):
+                continue
+            key = full_name[len(prefix):]
+            for leaf, arr in leaves.items():           # (K+1, L, ...)
+                gathered = jnp.take(arr, slots, axis=0)        # (B, L, ...)
+                eff[key + tag + leaf] = jnp.moveaxis(gathered, 0, 1)
+            apps.setdefault(key, []).append(
+                SiteApp(tag, m, group["aux"].get(full_name, {}), prof,
+                        banked=True))
+    return eff, apps
 
 
 # ---------------------------------------------------------------------------
@@ -223,16 +266,19 @@ def _remat(fn, mode: str):
 
 def forward(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
             peft: PEFTConfig, sites, *, remat: str = "none",
-            constrain=None) -> Tuple[jax.Array, jax.Array]:
+            constrain=None, bank=None,
+            bank_profiles=None) -> Tuple[jax.Array, jax.Array]:
     """Train/prefill forward. Returns (logits, moe_aux_loss)."""
     x = _embed(params, cfg, batch)
     B, S = x.shape[0], x.shape[1]
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
     act = (lambda t: constrain("act/hidden", t)) if constrain else (lambda t: t)
     x = act(x)
 
@@ -273,7 +319,8 @@ def loss_fn(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
 
 def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
             cfg: ModelConfig, peft: PEFTConfig, sites,
-            constrain=None) -> Tuple[jax.Array, Dict]:
+            constrain=None, bank=None,
+            bank_profiles=None) -> Tuple[jax.Array, Dict]:
     """Process a (B, S) prompt against a fresh cache (pos must be 0).
     Returns (next_tokens after the last prompt token, cache at pos=S)."""
     x = _embed(params, cfg, batch)
@@ -281,9 +328,11 @@ def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
 
     # cache lives in the scan carry and is written in place per layer —
     # threading K/V through scan ys would materialize a second (L,B,S,K,hd)
@@ -327,7 +376,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
                 cfg: ModelConfig, peft: PEFTConfig, sites,
-                constrain=None) -> Tuple[jax.Array, Dict]:
+                constrain=None, bank=None,
+                bank_profiles=None) -> Tuple[jax.Array, Dict]:
     """One token for every sequence in the batch. batch: tokens (B, 1) (or
     embeds (B,1,d), positions (3,B,1) for vlm). Returns (next_tokens, cache)."""
     x = _embed(params, cfg, batch)
@@ -336,9 +386,11 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
 
     # cache lives in the scan CARRY and is updated in place per layer —
     # xs/ys threading would materialize two extra cache-sized buffers

@@ -21,11 +21,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PEFTConfig
+from repro.core import adapter as adapter_api
 from repro.models import attention as attn_mod
 from repro.models import mamba2
 from repro.models.common import apply_rope, cross_entropy, dense_init, rms_norm
 from repro.models.transformer import (
-    apply_peft_to_layers, make_linear, _remat,
+    SiteApp, _app_tag, apply_peft_to_layers, make_linear, _remat,
 )
 
 
@@ -64,27 +65,35 @@ def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
 
 
 def _shared_adapter_rows(adapters: Dict, peft: PEFTConfig):
-    """-> ({site_key: stacked rows (napps, ...)}, aux_consts)."""
+    """-> ({tagged key: stacked rows (napps, ...)}, make_linear apps).
+
+    Shared-site adapters stay factored regardless of method (materializing
+    W+ΔW per application would defeat weight sharing) — the trainable leaves
+    ride the per-application row dict, frozen aux rides the SiteApp."""
+    method = adapter_api.resolve(peft.method)
+    tag = _app_tag("ad", method.name)
+    trainable = set(method.trainable_leaves(peft))
     rows: Dict[str, jax.Array] = {}
-    aux: Dict[str, Dict] = {}
+    apps: Dict[str, list] = {}
     for full_name, ad in adapters.items():
         if not full_name.startswith("shared/"):
             continue
         key = full_name.split("/")[-1]
-        if peft.method == "fourierft":
-            rows[key + "__c"] = ad["c"]
-            aux[key] = {k: v for k, v in ad.items() if k != "c"}
-        elif peft.method == "lora":
-            rows[key + "__la"] = ad["lora_a"]
-            rows[key + "__lb"] = ad["lora_b"]
-    return rows, aux
+        aux = {}
+        for leaf, v in ad.items():
+            if leaf in trainable:
+                rows[key + tag + leaf] = v
+            else:
+                aux[leaf] = v
+        apps.setdefault(key, []).append(SiteApp(tag, method, aux, peft))
+    return rows, apps
 
 
-def _shared_block(x, shared_params, ad_row, aux, cfg, peft, positions,
+def _shared_block(x, shared_params, ad_row, apps, cfg, peft, positions,
                   cache_kv=None, cache_pos=None):
     lp = dict(shared_params)
     lp.update(ad_row)
-    linear = make_linear(peft, aux)
+    linear = make_linear(apps)
     B = x.shape[0]
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     q = linear(lp, "wq", h).reshape(B, -1, cfg.n_heads, cfg.head_dim)
@@ -133,17 +142,20 @@ def _row_views(cfg: ModelConfig, rows: Dict):
 
 
 def forward(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
-            peft: PEFTConfig, sites, *, remat: str = "none", constrain=None):
+            peft: PEFTConfig, sites, *, remat: str = "none", constrain=None,
+            bank=None, bank_profiles=None):
     x = jnp.take(params["embed"], batch["tokens"], axis=0)
     B, S = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     mamba_adapters = {k: v for k, v in adapters.items()
                       if k.startswith("layers/")}
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], mamba_adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], mamba_adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
     act = (lambda t: constrain("act/hidden", t)) if constrain else (lambda t: t)
-    rows, shared_aux = _shared_adapter_rows(adapters, peft)
+    rows, shared_apps = _shared_adapter_rows(adapters, peft)
     main_layers, tail_layers = _group_views(cfg, eff_layers)
     main_rows, tail_rows = _row_views(cfg, rows)
 
@@ -152,14 +164,14 @@ def forward(params: Dict, adapters: Dict, batch: Dict, cfg: ModelConfig,
 
     def group_body(x, xs):
         gl, ad_row = xs
-        x, _ = _shared_block(act(x), params["shared"], ad_row, shared_aux, cfg,
+        x, _ = _shared_block(act(x), params["shared"], ad_row, shared_apps, cfg,
                              peft, positions)
         x, _ = jax.lax.scan(mamba_body, x, gl)
         return act(x), None
 
     x, _ = jax.lax.scan(_remat(group_body, remat), x, (main_layers, main_rows))
     if tail_layers is not None:
-        x, _ = _shared_block(x, params["shared"], tail_rows, shared_aux, cfg,
+        x, _ = _shared_block(x, params["shared"], tail_rows, shared_apps, cfg,
                              peft, positions)
         x, _ = jax.lax.scan(mamba_body, x, tail_layers)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -185,17 +197,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
-                cfg: ModelConfig, peft: PEFTConfig, sites, constrain=None):
+                cfg: ModelConfig, peft: PEFTConfig, sites, constrain=None,
+                bank=None, bank_profiles=None):
     x = jnp.take(params["embed"], batch["tokens"], axis=0)    # (B, 1, d)
     B = x.shape[0]
     pos = cache["pos"]
     positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
     mamba_adapters = {k: v for k, v in adapters.items()
                       if k.startswith("layers/")}
-    eff_layers, aux_consts = apply_peft_to_layers(
-        params["layers"], mamba_adapters, sites, peft, constrain=constrain)
-    linear = make_linear(peft, aux_consts, constrain)
-    rows, shared_aux = _shared_adapter_rows(adapters, peft)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], mamba_adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
+    rows, shared_apps = _shared_adapter_rows(adapters, peft)
     n_full, tail_len = _split(cfg)
 
     every = cfg.zamba.shared_every
@@ -218,7 +233,7 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
         gl, ad_row, gi = xs
         ck = jax.lax.dynamic_index_in_dim(ck_all, gi, 0, False)
         cv = jax.lax.dynamic_index_in_dim(cv_all, gi, 0, False)
-        x, (ck, cv) = _shared_block(x, params["shared"], ad_row, shared_aux,
+        x, (ck, cv) = _shared_block(x, params["shared"], ad_row, shared_apps,
                                     cfg, peft, positions, cache_kv=(ck, cv),
                                     cache_pos=pos)
         ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, gi, 0)
@@ -236,7 +251,7 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     if tail_len:
         tk = jax.lax.dynamic_index_in_dim(new_k, n_full, 0, False)
         tv = jax.lax.dynamic_index_in_dim(new_v, n_full, 0, False)
-        x, (tk, tv) = _shared_block(x, params["shared"], tail_rows, shared_aux,
+        x, (tk, tv) = _shared_block(x, params["shared"], tail_rows, shared_apps,
                                     cfg, peft, positions, cache_kv=(tk, tv),
                                     cache_pos=pos)
         new_k = jax.lax.dynamic_update_index_in_dim(new_k, tk, n_full, 0)

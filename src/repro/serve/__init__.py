@@ -1,1 +1,1 @@
-from repro.serve.engine import Engine, merge_for_serving
+from repro.serve.engine import AdapterBank, Engine, Request, merge_for_serving

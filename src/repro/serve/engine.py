@@ -1,59 +1,269 @@
 """Serving engine: merged-adapter deployment (the paper's zero-inference-
-latency property), prefill + batched greedy decode over slotted requests.
+latency property), prefill + batched greedy decode over slotted requests,
+and a multi-tenant **adapter bank** (DESIGN.md §Adapter API).
 
 `merge_for_serving` folds every mergeable ΔW into the base weights once —
-after that the serving graph is byte-identical to the unadapted model's (the
-zamba2 shared-block per-application adapters stay factored by construction;
-see models/zamba2.py).
+after that the serving graph is byte-identical to the unadapted model's.
+Sites that cannot merge stay factored and KEEP THEIR TRUE METHOD (the zamba2
+shared-block per-application adapters; any method whose `mergeable` flag is
+off).
+
+`AdapterBank` holds K resident factored adapters over one base: per method
+group the trainable leaves live in (K+1, L, …) arrays whose last row is a
+reserved all-zero row. `Request.adapter_id` selects a resident row; the
+jitted prefill/decode graphs gather per-request rows once per call and apply
+them with the method's `bank_apply` — no per-request merge, no recompile
+when residents change (array values change, shapes don't). Heterogeneous
+methods batch together because every request gathers a row from every
+method's bank and the factored contribution is linear in the trainables
+(zero row ⇒ exactly zero). LRU load/evict against adapter-only checkpoints
+(checkpoint/adapters.py) gives thousands-of-tenants serving at n·(2+L)
+numbers of storage per tenant — the paper's economics, end to end.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig
-from repro.core import peft as peft_mod
-from repro.models.registry import Model, add_time_dim, build
+from repro.configs.base import PEFTConfig, ShapeConfig
+from repro.core import adapter as adapter_api
+from repro.models.registry import (
+    Model, add_time_dim, build, resolve_default_targets,
+)
 
 
 def merge_for_serving(model: Model, params: Dict) -> Tuple[Model, Dict]:
+    """Fold every mergeable layer-stack ΔW into the base. Leftover adapters
+    (non-`layers/` sites such as the zamba2 shared block, or methods with
+    `mergeable=False`) stay factored under their TRUE method — the rebuilt
+    model keeps the original PEFTConfig whenever anything is left over."""
     peft = model.peft
-    if peft.method in ("none", "full") or not params.get("peft"):
+    method = model.method
+    if not method.has_site_params or not params.get("peft"):
         return model, params
     base = dict(params["base"])
     layers = dict(base["layers"])
     leftover = {}
     site_by_name = {s.name: s for s in model.sites}
     for name, ad in params["peft"].items():
-        if not name.startswith("layers/"):
-            leftover[name] = ad          # e.g. zamba2 shared per-app adapters
+        if not name.startswith("layers/") or not method.mergeable:
+            leftover[name] = ad      # e.g. zamba2 shared per-app adapters
             continue
         key = name.split("/")[-1]
-        if peft.method == "bitfit":
-            bkey = key + "__b"
-            layers[bkey] = (layers[bkey] + ad["delta_b"]) if bkey in layers \
-                else ad["delta_b"]
-            continue
-        dw = peft_mod.site_delta(ad, site_by_name[name], peft,
-                                 layers[key].dtype)
-        layers[key] = layers[key] + dw
+        method.merge_site(layers, key, ad, site_by_name[name], peft)
     base["layers"] = layers
     merged_model = build(model.cfg,
-                         peft.replace(method="fourierft") if leftover
-                         else peft.replace(method="none"),
+                         peft if leftover else peft.replace(method="none"),
                          remat=model.remat)
     return merged_model, {"base": base, "peft": leftover}
 
 
 @dataclass
 class Request:
-    prompt: jax.Array            # (S,) int32
+    prompt: jax.Array                  # (S,) int32
     max_new: int = 16
+    adapter_id: Optional[str] = None   # resident AdapterBank tenant (or base)
     out: Optional[List[int]] = None
+
+
+class AdapterBank:
+    """K resident factored adapters over one base model.
+
+    `profiles` maps method name -> PEFTConfig: one bank group per method the
+    deployment serves (all tenants of a group share frozen aux — entries /
+    bases are keyed by method + entry seed, enforced at load). Rows:
+
+        params[m]["sites"][site][leaf]  (K+1, L, ...)   trainable, zero-init
+        params[m]["aux"][site][leaf]    shared frozen aux (entries, b1/b2)
+
+    Row K is the reserved zero row: requests that don't use method m gather
+    it and contribute exactly zero (linearity contract, core/adapter.py).
+    Slots are global across groups — loading a tenant zeroes its slot row in
+    every group, then writes its own method's leaves. Eviction is LRU.
+    """
+
+    def __init__(self, model: Model, profiles: Dict[str, PEFTConfig],
+                 capacity: int, checkpoint_dir: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError("AdapterBank needs capacity >= 1")
+        self.capacity = capacity
+        self.zero_row = capacity
+        self.checkpoint_dir = checkpoint_dir
+        self._cfg = model.cfg
+        self.profiles: Dict[str, PEFTConfig] = {}
+        self._bank_sites: Dict[str, List] = {}
+        self.params: Dict[str, Dict] = {}
+        for mname, prof in profiles.items():
+            method = adapter_api.resolve(mname)
+            if not method.has_site_params:
+                raise ValueError(f"method {mname!r} has no adapter state")
+            if prof.method != mname:
+                prof = prof.replace(method=mname)
+            prof = resolve_default_targets(prof, model.cfg)
+            sites = [s for s in model.sites
+                     if s.name.startswith("layers/")
+                     and s.name.split("/")[-1] in prof.target_modules]
+            if not sites:
+                raise ValueError(f"profile {mname!r} targets no bank-eligible "
+                                 f"(layers/*) site of {model.cfg.name}")
+            self.profiles[mname] = prof
+            self._bank_sites[mname] = sites
+            group = {"sites": {}, "aux": {}}
+            for site in sites:
+                ad = method.init_site(jax.random.PRNGKey(0), site, prof)
+                trainable = set(method.trainable_leaves(prof))
+                group["sites"][site.name] = {
+                    k: jnp.zeros((capacity + 1,) + v.shape, v.dtype)
+                    for k, v in ad.items() if k in trainable}
+                aux = {k: v for k, v in ad.items() if k not in trainable}
+                if aux:
+                    group["aux"][site.name] = aux
+            self.params[mname] = group
+        # adapter_id -> (method name, slot); insertion order = LRU order
+        self._resident: "OrderedDict[str, Tuple[str, int]]" = OrderedDict()
+        self._free = list(range(capacity))
+
+    # ---- residency --------------------------------------------------------
+    @property
+    def resident_ids(self) -> Tuple[str, ...]:
+        return tuple(self._resident)
+
+    # config fields with no effect on the served math — everything NOT listed
+    # here must match the group profile (fail closed: a future method knob is
+    # compared by default, not silently ignored)
+    _PROFILE_IRRELEVANT = ("strategy", "use_pallas", "train_head",
+                           "param_dtype")
+
+    def _profile_key(self, peft: PEFTConfig) -> tuple:
+        d = dataclasses.asdict(peft)
+        for k in self._PROFILE_IRRELEVANT:
+            d.pop(k)
+        return tuple(sorted(d.items()))
+
+    def _clear_group_slot(self, mname: str, slot: int) -> None:
+        """Zero one slot row in one method group. Only the occupant's own
+        group can hold non-zero rows (loads write exactly one group; freed
+        slots are cleared on evict), so clearing stays O(one group), not
+        O(whole bank), under LRU churn."""
+        group = self.params[mname]
+        for site, leaves in group["sites"].items():
+            group["sites"][site] = {
+                k: v.at[slot].set(jnp.zeros(v.shape[1:], v.dtype))
+                for k, v in leaves.items()}
+
+    def load(self, adapter_id: str, adapters: Dict, peft: PEFTConfig) -> int:
+        """Make `adapter_id` resident (LRU-evicting if full). `adapters` is a
+        {site: {leaf: array}} tree — trainable leaves are written into the
+        slot row; any frozen leaves present are validated against the group's
+        shared aux (one bank group = one entry seed)."""
+        if peft.method not in self.profiles:
+            raise KeyError(f"no bank group for method {peft.method!r}; "
+                           f"groups: {sorted(self.profiles)}")
+        prof = self.profiles[peft.method]
+        peft = resolve_default_targets(peft, self._cfg)
+        if self._profile_key(peft) != self._profile_key(prof):
+            raise ValueError(
+                f"adapter {adapter_id!r} config {self._profile_key(peft)} "
+                f"does not match bank group {self._profile_key(prof)}")
+        method = adapter_api.resolve(peft.method)
+        group = self.params[peft.method]
+        known = {s.name for s in self._bank_sites[peft.method]}
+        stray = set(adapters) - known
+        if stray:
+            raise ValueError(
+                f"adapter {adapter_id!r} carries sites {sorted(stray)} "
+                f"outside the bank group's {sorted(known)} — serving it "
+                "would silently drop them")
+        # validate EVERYTHING before touching bank state: a failed load must
+        # not leak a slot or wipe the tenant it would have evicted
+        trainable = set(method.trainable_leaves(prof))
+        writes = []
+        for site in self._bank_sites[peft.method]:
+            ad = adapters.get(site.name)
+            if ad is None:
+                continue                       # stays zero at this site
+            missing = trainable - set(ad)
+            if missing:                        # fail closed: a partial site
+                raise ValueError(              # would silently serve wrong
+                    f"{adapter_id!r} {site.name} is missing trainable "
+                    f"leaves {sorted(missing)}")
+            for leaf, v in ad.items():
+                if leaf in trainable:
+                    rows = group["sites"][site.name][leaf]
+                    if v.shape != rows.shape[1:]:
+                        raise ValueError(
+                            f"{adapter_id!r} {site.name}/{leaf}: shape "
+                            f"{v.shape} != bank row {rows.shape[1:]}")
+                    writes.append((site.name, leaf, v))
+                else:
+                    shared = group["aux"].get(site.name, {}).get(leaf)
+                    if shared is None or not np.array_equal(
+                            np.asarray(v), np.asarray(shared)):
+                        raise ValueError(
+                            f"{adapter_id!r} frozen leaf {site.name}/{leaf} "
+                            "differs from the bank group's shared aux "
+                            "(adapters in one group must share entry seed)")
+        if adapter_id in self._resident:
+            prev_m, slot = self._resident.pop(adapter_id)
+            self._clear_group_slot(prev_m, slot)
+        elif self._free:
+            slot = self._free.pop(0)           # zero by construction
+        else:
+            _, (prev_m, slot) = self._resident.popitem(last=False)  # LRU
+            self._clear_group_slot(prev_m, slot)
+        for site_name, leaf, v in writes:
+            rows = group["sites"][site_name][leaf]
+            group["sites"][site_name][leaf] = \
+                rows.at[slot].set(v.astype(rows.dtype))
+        self._resident[adapter_id] = (peft.method, slot)
+        return slot
+
+    def load_from_checkpoint(self, adapter_id: str,
+                             directory: Optional[str] = None) -> int:
+        """LRU reload path: import an adapter-only export (trainables + config
+        manifest) and make it resident."""
+        from repro.checkpoint import adapters as adapter_ckpt
+        directory = directory or self.checkpoint_dir
+        if directory is None:
+            raise ValueError("no checkpoint directory configured")
+        tree, peft = adapter_ckpt.import_adapter(directory, adapter_id)
+        return self.load(adapter_id, tree, peft)
+
+    def evict(self, adapter_id: str) -> None:
+        mname, slot = self._resident.pop(adapter_id)
+        self._clear_group_slot(mname, slot)
+        self._free.append(slot)
+
+    def touch(self, adapter_id: str) -> None:
+        self._resident.move_to_end(adapter_id)
+
+    def slot_rows(self, adapter_ids: Sequence[Optional[str]],
+                  batch: int) -> Dict[str, jax.Array]:
+        """Per-method gather rows for a batch: requests without an adapter —
+        or using a different method — point at the reserved zero row."""
+        if len(adapter_ids) > batch:
+            raise ValueError(f"{len(adapter_ids)} adapter_ids for a "
+                             f"{batch}-slot batch")
+        missing = {a for a in adapter_ids
+                   if a is not None and a not in self._resident}
+        if missing:     # validate before touching: failed calls leave LRU as-is
+            raise KeyError(f"adapters {sorted(missing)} are not resident; "
+                           f"call load()/load_from_checkpoint() first")
+        rows = {m: np.full((batch,), self.zero_row, np.int32)
+                for m in self.profiles}
+        for i, aid in enumerate(adapter_ids):
+            if aid is None:
+                continue
+            mname, slot = self._resident[aid]
+            rows[mname][i] = slot
+            self.touch(aid)
+        return {m: jnp.asarray(v) for m, v in rows.items()}
 
 
 class Engine:
@@ -62,12 +272,24 @@ class Engine:
     `mesh`: optional jax Mesh — merged params are placed per the dist
     sharding rules (TP over `model`, replicated over batch axes) and the KV
     cache per `cache_specs`, so the jitted prefill/decode graphs compile
-    SPMD-partitioned instead of replicated."""
+    SPMD-partitioned instead of replicated.
+
+    `bank`: optional AdapterBank — enables per-request `adapter_id`s; the
+    bank's resident rows enter the jitted graphs as `params["bank"]` and the
+    per-request gather indices as `batch["adapter_slots"]`, so residency
+    changes never recompile."""
 
     def __init__(self, model: Model, params: Dict, batch_slots: int,
-                 max_len: int, merge: bool = True, mesh=None):
+                 max_len: int, merge: bool = True, mesh=None,
+                 bank: Optional[AdapterBank] = None):
         if merge:
             model, params = merge_for_serving(model, params)
+        self.bank = bank
+        if bank is not None:
+            # fresh Model facade: never mutate the caller's (merge may have
+            # returned the input model unchanged, and it may be shared)
+            model = dataclasses.replace(model,
+                                        bank_profiles=dict(bank.profiles))
         self.mesh = mesh
         if mesh is not None:
             from repro.dist import sharding as shd
@@ -91,14 +313,32 @@ class Engine:
         return cache
 
     def generate(self, prompts: List[jax.Array], max_new: int = 16,
-                 stepwise_prefill: bool = False):
+                 stepwise_prefill: bool = False,
+                 adapter_ids: Optional[Sequence[Optional[str]]] = None):
         """Greedy-decode a batch of equal-priority prompts (padded to the
         longest; padded prefill keeps every slot's KV cache consistent).
+
+        adapter_ids: per-prompt AdapterBank tenant (None = bare base); the
+        whole heterogeneous batch runs through ONE jitted graph.
 
         stepwise_prefill: legacy token-by-token teacher-forced prefill
         (reference path for the equivalence test; S decode dispatches)."""
         assert len(prompts) <= self.batch
+        if adapter_ids is not None and len(adapter_ids) != len(prompts):
+            # fail closed: a silently None-padded tail would serve those
+            # prompts unadapted under the caller's nose
+            raise ValueError(f"{len(adapter_ids)} adapter_ids for "
+                             f"{len(prompts)} prompts")
         B = self.batch
+        params = self.params
+        extra: Dict = {}
+        if self.bank is not None:
+            ids = list(adapter_ids or [])
+            ids += [None] * (B - len(ids))
+            extra["adapter_slots"] = self.bank.slot_rows(ids, B)
+            params = {**params, "bank": self.bank.params}
+        elif adapter_ids is not None and any(a is not None for a in adapter_ids):
+            raise ValueError("adapter_ids given but the engine has no bank")
         plen = max(int(p.shape[0]) for p in prompts)
         toks = jnp.zeros((B, plen) + prompts[0].shape[1:], jnp.int32)
         for i, p in enumerate(prompts):
@@ -107,16 +347,29 @@ class Engine:
         if stepwise_prefill:
             last = None
             for t in range(plen):
-                last, cache = self._decode(self.params, cache,
-                                           {"tokens": toks[:, t:t + 1]})
+                last, cache = self._decode(params, cache,
+                                           {"tokens": toks[:, t:t + 1],
+                                            **extra})
         else:
-            last, cache = self._prefill(self.params, cache, {"tokens": toks})
+            last, cache = self._prefill(params, cache,
+                                        {"tokens": toks, **extra})
         outs = [last]
         cur = add_time_dim(last)
         for _ in range(max_new - 1):
-            nxt, cache = self._decode(self.params, cache,
-                                      {"tokens": cur})
+            nxt, cache = self._decode(params, cache,
+                                      {"tokens": cur, **extra})
             outs.append(nxt)
             cur = add_time_dim(nxt)
         gen = jnp.stack(outs, axis=1)                     # (B, max_new, ...)
         return [gen[i] for i in range(len(prompts))]
+
+    def generate_requests(self, requests: List[Request]):
+        """Request-object front end: one heterogeneous-adapter batch."""
+        if not requests:
+            return requests
+        max_new = max(r.max_new for r in requests)
+        outs = self.generate([r.prompt for r in requests], max_new=max_new,
+                             adapter_ids=[r.adapter_id for r in requests])
+        for r, o in zip(requests, outs):
+            r.out = [int(t) for t in np.asarray(o[:r.max_new]).reshape(-1)]
+        return requests

@@ -26,9 +26,11 @@ from repro.optim import adamw, schedules
 
 
 def split_params(model: Model, params: Dict) -> Tuple[Dict, Dict]:
-    """-> (trainable, frozen). frozen = {"base":..., "peft":... (frozen leaves)}."""
+    """-> (trainable, frozen). frozen = {"base":..., "peft":... (frozen leaves)}.
+    The trainable/frozen boundary inside each adapter dict comes from the
+    method's `trainable_leaves` protocol (core/adapter.py)."""
     peft = model.peft
-    if peft.method == "full":
+    if model.method.trains_base:
         trainable = {"base": params["base"]}
         frozen = {"base": {}, "peft": {}}
         return trainable, frozen
@@ -46,7 +48,7 @@ def split_params(model: Model, params: Dict) -> Tuple[Dict, Dict]:
 
 
 def join_params(model: Model, trainable: Dict, frozen: Dict) -> Dict:
-    if model.peft.method == "full":
+    if model.method.trains_base:
         return {"base": trainable["base"], "peft": {}}
     base = frozen["base"]
     if "head" in trainable:
@@ -79,7 +81,7 @@ def init_state(model: Model, tcfg: TrainConfig, rng: jax.Array) -> Tuple[Dict, D
 
 
 def _loss_for(model: Model):
-    if model.peft.method == "full":
+    if model.method.trains_base:
         def loss_f(trainable, frozen, batch):
             return model.loss({"base": trainable["base"], "peft": {}}, batch)
     else:

@@ -1,0 +1,270 @@
+"""AdapterMethod protocol conformance, run over EVERY registered method:
+registry behavior, init shapes, factored == x @ ΔW, row-batched bank_apply,
+trainable-leaf masking, merge_site, and paper Table-1 accounting through the
+protocol (the redesign must not move a single count)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
+from repro.core import peft as peft_mod
+from repro.core.adapter import AdapterSite
+from repro.configs.paper_models import PAPER_MODELS
+from repro.models import build
+
+SITE = AdapterSite("layers/wq", 48, 32, 3)
+
+# every method owning per-site state, with a config that gives it nontrivial
+# trainables after randomization
+PARAM_METHODS = adapter_api.registered_methods(site_params_only=True)
+
+
+def _peft(method: str) -> PEFTConfig:
+    return PEFTConfig(method=method, n=12, alpha=20.0, lora_r=2,
+                      param_dtype="float32")
+
+
+def _randomized_site(method: str, site=SITE):
+    m = adapter_api.resolve(method)
+    peft = _peft(method)
+    ad = m.init_site(jax.random.PRNGKey(0), site, peft)
+    ad = {k: (v + 0.05 * jax.random.normal(jax.random.PRNGKey(i + 1),
+                                           v.shape)
+              if jnp.issubdtype(v.dtype, jnp.floating) else v)
+          for i, (k, v) in enumerate(ad.items())}
+    return m, peft, ad
+
+
+class TestRegistry:
+    def test_all_methods_registered(self):
+        names = adapter_api.registered_methods()
+        for expect in ("fourierft", "lora", "bitfit", "dct", "circulant",
+                       "none", "full"):
+            assert expect in names
+
+    def test_unknown_method_raises(self):
+        with pytest.raises(KeyError, match="unknown adapter method"):
+            adapter_api.resolve("does-not-exist")
+        with pytest.raises(KeyError):
+            build(C.reduced(C.get("yi-6b")), PEFTConfig(method="nope"))
+
+    def test_duplicate_registration_rejected(self):
+        class Dup(adapter_api.AdapterMethod):
+            name = "fourierft"
+        with pytest.raises(ValueError, match="already registered"):
+            adapter_api.register(Dup())
+
+    def test_degenerate_methods_have_no_state(self):
+        for name in ("none", "full"):
+            m = adapter_api.resolve(name)
+            assert not m.has_site_params
+            assert m.trainable_leaves(_peft(name)) == ()
+            assert peft_mod.init_adapters(jax.random.PRNGKey(0), [SITE],
+                                          _peft(name)) == {}
+        assert adapter_api.resolve("full").trains_base
+        assert not adapter_api.resolve("fourierft").trains_base
+
+
+class TestConformance:
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_init_shapes_stack_leading(self, method):
+        m, peft, ad = _randomized_site(method)
+        trainable = m.trainable_leaves(peft)
+        assert trainable, method
+        for leaf in trainable:
+            assert leaf in ad, (method, leaf)
+            assert ad[leaf].shape[0] == SITE.stack, (method, leaf)
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_factored_equals_x_at_delta(self, method):
+        """factored_apply == x @ site_delta for linear-delta methods; BitFit's
+        bias shift equals its (broadcast) delta_b."""
+        m, peft, ad = _randomized_site(method)
+        trainable = {k: ad[k][0] for k in m.trainable_leaves(peft)}
+        aux = {k: v for k, v in ad.items()
+               if k not in m.trainable_leaves(peft)}
+        x = jax.random.normal(jax.random.PRNGKey(7), (5, SITE.d_in))
+        y = m.factored_apply(x, trainable, aux, SITE.d_in, SITE.d_out, peft)
+        assert y.shape == (5, SITE.d_out)
+        if m.linear_delta:
+            single = AdapterSite(SITE.name, SITE.d_in, SITE.d_out, 1)
+            dw = m.site_delta({k: v[:1] for k, v in ad.items()
+                               if k in m.trainable_leaves(peft)} | aux,
+                              single, peft, None)[0]
+            np.testing.assert_allclose(np.asarray(y), np.asarray(x @ dw),
+                                       atol=2e-4, rtol=1e-4)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(y),
+                np.broadcast_to(np.asarray(ad["delta_b"][0]),
+                                (5, SITE.d_out)), atol=1e-6)
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_bank_apply_matches_per_row_factored(self, method):
+        """Row-batched bank_apply == per-row factored_apply (the serving
+        adapter-bank contract), and the zero row contributes exactly zero."""
+        m, peft, _ = _randomized_site(method)
+        B, T = 3, 4
+        rows = []
+        for b in range(B):
+            _, _, ad = _randomized_site(method)
+            rows.append(ad)
+        trainable_names = m.trainable_leaves(peft)
+        aux = {k: v for k, v in rows[0].items() if k not in trainable_names}
+        tr = {k: jnp.stack([r[k][0] for r in rows]) for k in trainable_names}
+        x = jax.random.normal(jax.random.PRNGKey(9), (B, T, SITE.d_in))
+        y = m.bank_apply(x, tr, aux, SITE.d_in, SITE.d_out, peft)
+        assert y.shape == (B, T, SITE.d_out)
+        for b in range(B):
+            yb = m.factored_apply(x[b], {k: v[b] for k, v in tr.items()},
+                                  aux, SITE.d_in, SITE.d_out, peft)
+            np.testing.assert_allclose(np.asarray(y[b]), np.asarray(yb),
+                                       atol=2e-5, rtol=1e-5)
+        zero = {k: jnp.zeros_like(v) for k, v in tr.items()}
+        yz = m.bank_apply(x, zero, aux, SITE.d_in, SITE.d_out, peft)
+        assert not np.any(np.asarray(yz)), f"{method}: zero row must be zero"
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_trainable_leaf_masking(self, method):
+        """trainable_adapter_tree keeps exactly the protocol's trainable
+        leaves — the train step's gradient filter."""
+        m, peft, ad = _randomized_site(method)
+        tree = {"layers/wq": ad}
+        tr = peft_mod.trainable_adapter_tree(tree, peft)
+        assert set(tr["layers/wq"]) == set(m.trainable_leaves(peft))
+        frozen = set(ad) - set(m.trainable_leaves(peft))
+        for leaf in frozen:
+            assert leaf not in tr["layers/wq"]
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_merge_site_folds_delta(self, method):
+        m, peft, ad = _randomized_site(method)
+        w = jax.random.normal(jax.random.PRNGKey(3),
+                              (SITE.stack, SITE.d_in, SITE.d_out))
+        eff = {"wq": w}
+        m.merge_site(eff, "wq", ad, SITE, peft)
+        if m.linear_delta:
+            dw = m.site_delta(ad, SITE, peft, w.dtype)
+            np.testing.assert_allclose(np.asarray(eff["wq"]),
+                                       np.asarray(w + dw), atol=1e-5)
+        else:
+            np.testing.assert_allclose(np.asarray(eff["wq__b"]),
+                                       np.asarray(ad["delta_b"]), atol=1e-6)
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_forward_merged_equals_factored(self, method):
+        """End to end through a real model: merged strategy == factored."""
+        cfg = C.reduced(C.get("yi-6b")).replace(vocab=64,
+                                                param_dtype="float32",
+                                                dtype="float32")
+        peft = _peft(method)
+        model = build(cfg, peft)
+        params = model.init(jax.random.PRNGKey(0))
+        params["peft"] = jax.tree.map(
+            lambda x: x + 0.03 if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            params["peft"])
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 10),
+                                              0, 64)}
+        lm, _ = model.forward(params, batch)
+        lf, _ = build(cfg, peft.replace(strategy="factored")).forward(params,
+                                                                      batch)
+        np.testing.assert_allclose(np.asarray(lm), np.asarray(lf),
+                                   atol=5e-4, rtol=1e-3)
+
+
+class TestMergeableFlag:
+    """A method with mergeable=False must stay factored under the merged
+    strategy and survive merge_for_serving as a true-method leftover."""
+
+    @pytest.fixture(scope="class")
+    def nomerge(self):
+        name = "_test_nomerge"
+        try:
+            return adapter_api.resolve(name)
+        except KeyError:
+            pass
+
+        class NoMerge(adapter_api.resolve("fourierft").__class__):
+            pass
+        NoMerge.name = name
+        NoMerge.mergeable = False
+        return adapter_api.register(NoMerge())
+
+    def test_merged_strategy_falls_back_to_factored(self, nomerge):
+        cfg = C.reduced(C.get("yi-6b")).replace(vocab=64,
+                                                param_dtype="float32",
+                                                dtype="float32")
+        peft = _peft(nomerge.name)                    # strategy="merged"
+        model = build(cfg, peft)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                              0, 64)}
+        a, _ = model.forward(params, batch)
+        ref, _ = build(cfg, peft.replace(method="fourierft")).forward(params,
+                                                                      batch)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(ref),
+                                   atol=5e-4, rtol=1e-3)
+
+    def test_merge_for_serving_keeps_leftover(self, nomerge):
+        from repro.serve import merge_for_serving
+        cfg = C.reduced(C.get("yi-6b")).replace(vocab=64,
+                                                param_dtype="float32",
+                                                dtype="float32")
+        model = build(cfg, _peft(nomerge.name))
+        params = model.init(jax.random.PRNGKey(0))
+        mm, mp = merge_for_serving(model, params)
+        assert mm.peft.method == nomerge.name         # true method kept
+        assert set(mp["peft"]) == set(params["peft"])  # nothing folded
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                              0, 64)}
+        a, _ = model.forward(params, batch)
+        b, _ = mm.forward(mp, batch)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestAccounting:
+    """Paper Table 1 through the protocol — the redesign moves no count."""
+
+    def test_fourierft_and_lora_counts_unchanged(self):
+        cfg = PAPER_MODELS["llama2-7b"]
+        sites = peft_mod.qv_sites_for(cfg)
+        assert peft_mod.count_trainable(
+            sites, PEFTConfig(method="fourierft", n=1000)) == 64_000
+        assert peft_mod.count_trainable(
+            sites, PEFTConfig(method="lora", lora_r=64)) == 33_554_432
+        b = peft_mod.storage_bytes(sites, PEFTConfig(method="fourierft",
+                                                     n=1000))
+        assert b == (64_000 + 2_000) * 4
+
+    def test_new_method_counts(self):
+        cfg = PAPER_MODELS["llama2-7b"]
+        sites = peft_mod.qv_sites_for(cfg)
+        # dct mirrors fourierft: n per layer per site + 2n entries per shape
+        assert peft_mod.count_trainable(
+            sites, PEFTConfig(method="dct", n=1000)) == 64_000
+        assert peft_mod.storage_bytes(
+            sites, PEFTConfig(method="dct", n=1000)) == (64_000 + 2_000) * 4
+        # circulant: max(d1,d2) per layer per site, no frozen numbers
+        d = cfg.d_model
+        expect = 2 * cfg.num_layers * d
+        assert peft_mod.count_trainable(
+            sites, PEFTConfig(method="circulant")) == expect
+        assert peft_mod.storage_bytes(
+            sites, PEFTConfig(method="circulant")) == expect * 4
+
+    def test_bitfit_count(self):
+        sites = [SITE]
+        assert peft_mod.count_trainable(
+            sites, PEFTConfig(method="bitfit")) == SITE.d_out * SITE.stack
+
+    @pytest.mark.parametrize("method", PARAM_METHODS)
+    def test_count_matches_actual_leaves(self, method):
+        """count_trainable == the summed size of the actual trainable leaves
+        init_site produces (counts can't drift from reality)."""
+        m, peft, ad = _randomized_site(method)
+        actual = sum(int(np.prod(ad[k].shape))
+                     for k in m.trainable_leaves(peft))
+        assert m.count_trainable(SITE, peft) == actual

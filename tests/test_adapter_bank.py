@@ -1,0 +1,319 @@
+"""Multi-tenant adapter-bank serving: heterogeneous batches reproduce each
+tenant's single-tenant outputs bit-for-bit at fp32, LRU eviction + adapter-
+only-checkpoint reload round-trips, and the bank composes with meshes and
+recurrent families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import adapters as adapter_ckpt
+from repro.configs.base import PEFTConfig
+from repro.core import peft as peft_mod
+from repro.models import build
+from repro.serve import AdapterBank, Engine, Request
+
+TENANTS = ("tenant-fft", "tenant-lora", "tenant-circ")
+METHODS = ("fourierft", "lora", "circulant")
+
+
+def _cfg(arch="yi-6b"):
+    return C.reduced(C.get(arch)).replace(vocab=64, param_dtype="float32",
+                                          dtype="float32")
+
+
+def _profiles():
+    return {
+        "fourierft": PEFTConfig(method="fourierft", n=16, alpha=25.0,
+                                param_dtype="float32"),
+        "lora": PEFTConfig(method="lora", lora_r=2, param_dtype="float32"),
+        "circulant": PEFTConfig(method="circulant", alpha=25.0,
+                                param_dtype="float32"),
+    }
+
+
+def _tenant_adapters(model, profiles):
+    """Three nontrivially-valued adapters, one per method."""
+    out = {}
+    for i, (tid, m) in enumerate(zip(TENANTS, METHODS)):
+        prof = profiles[m]
+        tree = peft_mod.init_adapters(jax.random.PRNGKey(10 + i),
+                                      model.sites, prof)
+        tree = jax.tree.map(
+            lambda x: x + 0.05 if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree)
+        out[tid] = (tree, prof)
+    return out
+
+
+def _setup(arch="yi-6b", capacity=4):
+    cfg = _cfg(arch)
+    model = build(cfg, PEFTConfig(method="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    profiles = _profiles()
+    tenants = _tenant_adapters(model, profiles)
+    bank = AdapterBank(model, profiles, capacity=capacity)
+    for tid, (tree, prof) in tenants.items():
+        bank.load(tid, tree, prof)
+    return model, params, profiles, tenants, bank
+
+
+PROMPTS = [jnp.array([1, 2, 3, 4], jnp.int32),
+           jnp.array([5, 6, 7], jnp.int32),
+           jnp.array([9, 8], jnp.int32)]
+
+
+class TestHeterogeneousBatch:
+    def test_three_tenant_batch_matches_single_tenant_bitwise(self):
+        """Acceptance: a 3-adapter heterogeneous batch reproduces each
+        adapter's single-tenant outputs bit-for-bit at fp32."""
+        model, params, profiles, tenants, bank = _setup()
+        eng = Engine(model, params, batch_slots=3, max_len=32, bank=bank)
+        het = eng.generate(PROMPTS, max_new=6, adapter_ids=list(TENANTS))
+        for i, tid in enumerate(TENANTS):
+            b1 = AdapterBank(model, profiles, capacity=4)
+            b1.load(tid, *tenants[tid])
+            e1 = Engine(model, params, batch_slots=3, max_len=32, bank=b1)
+            single = e1.generate(PROMPTS, max_new=6, adapter_ids=[tid] * 3)
+            np.testing.assert_array_equal(np.asarray(het[i]),
+                                          np.asarray(single[i]))
+
+    def test_heterogeneous_logits_bitwise_fp32(self):
+        """Same property at the logits level, through the full forward."""
+        model, params, profiles, tenants, bank = _setup()
+        model.bank_profiles = dict(bank.profiles)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 0, 64)
+        p = {**params, "bank": bank.params}
+        het, _ = model.forward(
+            p, {"tokens": toks,
+                "adapter_slots": bank.slot_rows(list(TENANTS), 3)})
+        for i, tid in enumerate(TENANTS):
+            single, _ = model.forward(
+                p, {"tokens": toks,
+                    "adapter_slots": bank.slot_rows([tid] * 3, 3)})
+            np.testing.assert_array_equal(np.asarray(het[i]),
+                                          np.asarray(single[i]))
+
+    def test_none_adapter_id_equals_bare_base(self):
+        """The reserved zero row contributes exactly zero: a request with no
+        adapter_id through the bank engine == the bare-base engine."""
+        model, params, _, _, bank = _setup()
+        eng = Engine(model, params, batch_slots=3, max_len=32, bank=bank)
+        mixed = eng.generate(PROMPTS, max_new=6,
+                             adapter_ids=["tenant-fft", None, None])
+        bare = Engine(model, params, batch_slots=3,
+                      max_len=32).generate(PROMPTS, max_new=6)
+        np.testing.assert_array_equal(np.asarray(mixed[1]),
+                                      np.asarray(bare[1]))
+        np.testing.assert_array_equal(np.asarray(mixed[2]),
+                                      np.asarray(bare[2]))
+        assert not np.array_equal(np.asarray(mixed[0]), np.asarray(bare[0]))
+
+    def test_request_front_end(self):
+        model, params, _, _, bank = _setup()
+        eng = Engine(model, params, batch_slots=3, max_len=32, bank=bank)
+        reqs = [Request(PROMPTS[i], max_new=4, adapter_id=tid)
+                for i, tid in enumerate(TENANTS)]
+        eng.generate_requests(reqs)
+        ref = eng.generate(PROMPTS, max_new=4, adapter_ids=list(TENANTS))
+        for r, o in zip(reqs, ref):
+            assert r.out == [int(t) for t in np.asarray(o)]
+
+    def test_ssm_family_bank(self):
+        """The gather-then-apply path also rides the recurrent scan (mamba2
+        adapts wx/wo_ssm; profile targets auto-resolve)."""
+        cfg = _cfg("mamba2-2.7b")
+        model = build(cfg, PEFTConfig(method="none"))
+        params = model.init(jax.random.PRNGKey(0))
+        prof = {"fourierft": PEFTConfig(method="fourierft", n=8, alpha=25.0,
+                                        param_dtype="float32")}
+        bank = AdapterBank(model, prof, capacity=2)
+        tree = peft_mod.init_adapters(jax.random.PRNGKey(3), model.sites,
+                                      bank.profiles["fourierft"])
+        bank.load("ssm-tenant", tree, bank.profiles["fourierft"])
+        eng = Engine(model, params, batch_slots=2, max_len=24, bank=bank)
+        outs = eng.generate(PROMPTS[:2], max_new=4,
+                            adapter_ids=["ssm-tenant", None])
+        bare = Engine(model, params, batch_slots=2, max_len=24).generate(
+            PROMPTS[:2], max_new=4)
+        np.testing.assert_array_equal(np.asarray(outs[1]),
+                                      np.asarray(bare[1]))
+
+    def test_request_front_end_without_bank(self):
+        """A bank-less engine serves Requests with no adapter_id (and still
+        rejects real adapter ids)."""
+        model, params, _, _, _ = _setup()
+        eng = Engine(model, params, batch_slots=2, max_len=24)
+        reqs = [Request(PROMPTS[0], max_new=4), Request(PROMPTS[1], max_new=4)]
+        eng.generate_requests(reqs)
+        ref = eng.generate(PROMPTS[:2], max_new=4)
+        for r, o in zip(reqs, ref):
+            assert r.out == [int(t) for t in np.asarray(o)]
+        with pytest.raises(ValueError, match="no bank"):
+            eng.generate(PROMPTS[:2], max_new=2, adapter_ids=["tenant-fft",
+                                                              None])
+
+    def test_engine_does_not_mutate_caller_model(self):
+        """Two engines over one Model object must not cross-contaminate
+        bank profiles (Engine now builds its own facade)."""
+        model, params, profiles, tenants, bank = _setup()
+        assert model.bank_profiles is None
+        eng = Engine(model, params, batch_slots=2, max_len=24, bank=bank)
+        assert model.bank_profiles is None
+        assert eng.model is not model
+        plain = Engine(model, params, batch_slots=2, max_len=24)
+        a = plain.generate(PROMPTS[:2], max_new=4)
+        b = Engine(model, params, batch_slots=2,
+                   max_len=24).generate(PROMPTS[:2], max_new=4)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_hybrid_family_bank(self):
+        """zamba2: the bank rides the mamba layer sites (the shared block's
+        per-application adapters are orthogonal to tenancy)."""
+        cfg = _cfg("zamba2-7b")
+        model = build(cfg, PEFTConfig(method="none"))
+        params = model.init(jax.random.PRNGKey(0))
+        prof = {"fourierft": PEFTConfig(method="fourierft", n=8, alpha=25.0,
+                                        param_dtype="float32",
+                                        target_modules=("wx", "wo_ssm"))}
+        bank = AdapterBank(model, prof, capacity=2)
+        tree = peft_mod.init_adapters(jax.random.PRNGKey(3), model.sites,
+                                      bank.profiles["fourierft"])
+        bank.load("hy-tenant", tree, bank.profiles["fourierft"])
+        eng = Engine(model, params, batch_slots=2, max_len=24, bank=bank)
+        outs = eng.generate(PROMPTS[:2], max_new=4,
+                            adapter_ids=["hy-tenant", None])
+        bare = Engine(model, params, batch_slots=2, max_len=24).generate(
+            PROMPTS[:2], max_new=4)
+        np.testing.assert_array_equal(np.asarray(outs[1]),
+                                      np.asarray(bare[1]))
+
+    def test_mesh_sharded_bank_engine_matches(self):
+        """Bank engine under a host mesh == unsharded bank engine (the CI
+        smoke runs this file on 8 fake devices)."""
+        from repro.launch.mesh import make_host_mesh
+        model, params, _, _, bank = _setup()
+        plain = Engine(model, params, batch_slots=3, max_len=32, bank=bank)
+        sharded = Engine(model, params, batch_slots=3, max_len=32,
+                         mesh=make_host_mesh(), bank=bank)
+        a = plain.generate(PROMPTS, max_new=4, adapter_ids=list(TENANTS))
+        b = sharded.generate(PROMPTS, max_new=4, adapter_ids=list(TENANTS))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestResidency:
+    def test_lru_eviction_and_checkpoint_reload_roundtrip(self, tmp_path):
+        """Evict under capacity pressure, reload from an adapter-only export,
+        and reproduce the pre-eviction outputs bit-for-bit."""
+        model, params, profiles, tenants, _ = _setup()
+        bank = AdapterBank(model, profiles, capacity=2,
+                           checkpoint_dir=str(tmp_path))
+        for tid in TENANTS:
+            adapter_ckpt.export_adapter(str(tmp_path), tid, *tenants[tid])
+        bank.load_from_checkpoint("tenant-fft")
+        bank.load_from_checkpoint("tenant-lora")
+        eng = Engine(model, params, batch_slots=3, max_len=32, bank=bank)
+        before = eng.generate(PROMPTS, max_new=5,
+                              adapter_ids=["tenant-fft"] * 3)
+        # third tenant forces LRU eviction of tenant-lora (fft was touched)
+        eng.generate(PROMPTS, max_new=2, adapter_ids=["tenant-fft"] * 3)
+        bank.load_from_checkpoint("tenant-circ")
+        assert set(bank.resident_ids) == {"tenant-fft", "tenant-circ"}
+        with pytest.raises(KeyError, match="not resident"):
+            eng.generate(PROMPTS, max_new=2, adapter_ids=["tenant-lora"] * 3)
+        # reload the evicted tenant; fft gets evicted, then reload fft and
+        # check outputs are unchanged across the whole evict/reload cycle
+        bank.load_from_checkpoint("tenant-lora")
+        bank.load_from_checkpoint("tenant-fft")
+        after = eng.generate(PROMPTS, max_new=5,
+                             adapter_ids=["tenant-fft"] * 3)
+        for x, y in zip(before, after):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_export_import_roundtrip_regenerates_frozen_aux(self, tmp_path):
+        """Adapter-only exports store trainables only; import rebuilds the
+        spectral entries from method + entry seed."""
+        model, _, profiles, tenants, _ = _setup()
+        tree, prof = tenants["tenant-fft"]
+        path = adapter_ckpt.export_adapter(str(tmp_path), "t", tree, prof)
+        import numpy as onp
+        z = onp.load(f"{path}/adapter.npz")
+        assert all(k.endswith("::c") for k in z.files)   # no entries stored
+        got, got_peft = adapter_ckpt.import_adapter(str(tmp_path), "t",
+                                                    sites=model.sites)
+        assert got_peft == prof
+        for site, d in tree.items():
+            np.testing.assert_array_equal(np.asarray(got[site]["c"]),
+                                          np.asarray(d["c"]))
+            np.testing.assert_array_equal(np.asarray(got[site]["entries"]),
+                                          np.asarray(d["entries"]))
+
+    def test_profile_mismatch_rejected(self):
+        model, _, profiles, tenants, bank = _setup()
+        tree, prof = tenants["tenant-fft"]
+        with pytest.raises(ValueError, match="does not match bank group"):
+            bank.load("bad", tree, prof.replace(entry_seed=999))
+        with pytest.raises(KeyError, match="no bank group"):
+            bank.load("bad", {}, PEFTConfig(method="bitfit"))
+
+    def test_failed_load_leaks_no_slot(self):
+        """A load that fails validation must leave residency, capacity, and
+        the would-be-evicted tenant's rows untouched."""
+        model, params, profiles, tenants, _ = _setup()
+        bank = AdapterBank(model, profiles, capacity=1)
+        bank.load("tenant-fft", *tenants["tenant-fft"])
+        eng = Engine(model, params, batch_slots=2, max_len=24, bank=bank)
+        before = eng.generate(PROMPTS[:2], max_new=4,
+                              adapter_ids=["tenant-fft", None])
+        tree, prof = tenants["tenant-lora"]
+        bad = {site: {k: v[..., :1] for k, v in d.items()}
+               for site, d in tree.items()}
+        for _ in range(3):                    # repeated failures don't drain
+            with pytest.raises(ValueError, match="bank row"):
+                bank.load("bad-tenant", bad, prof)
+        assert bank.resident_ids == ("tenant-fft",)
+        after = eng.generate(PROMPTS[:2], max_new=4,
+                             adapter_ids=["tenant-fft", None])
+        for x, y in zip(before, after):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # capacity is intact: a good load still succeeds (evicting fft)
+        bank.load("tenant-lora", tree, prof)
+        assert bank.resident_ids == ("tenant-lora",)
+
+    def test_partial_site_export_rejected(self):
+        """An export missing one trainable leaf at a site must be rejected —
+        loading it would silently serve a zeroed (bare-base-ish) tenant."""
+        model, _, profiles, tenants, bank = _setup()
+        tree, prof = tenants["tenant-lora"]
+        partial = {site: {k: v for k, v in d.items() if k != "lora_b"}
+                   for site, d in tree.items()}
+        with pytest.raises(ValueError, match="missing trainable leaves"):
+            bank.load("partial", partial, prof)
+
+    def test_oversized_adapter_ids_rejected(self):
+        model, params, _, _, bank = _setup()
+        eng = Engine(model, params, batch_slots=3, max_len=24, bank=bank)
+        with pytest.raises(ValueError, match="adapter_ids"):
+            eng.generate(PROMPTS, max_new=2,
+                         adapter_ids=list(TENANTS) + ["tenant-fft"])
+
+    def test_slot_reuse_clears_stale_rows(self):
+        """A reused slot must not leak the previous tenant's rows — the new
+        tenant's unused method groups read as zero."""
+        model, params, profiles, tenants, _ = _setup()
+        bank = AdapterBank(model, profiles, capacity=1)
+        bank.load("tenant-fft", *tenants["tenant-fft"])
+        bank.load("tenant-lora", *tenants["tenant-lora"])    # evicts fft
+        eng = Engine(model, params, batch_slots=2, max_len=24, bank=bank)
+        outs = eng.generate(PROMPTS[:2], max_new=4,
+                            adapter_ids=["tenant-lora", None])
+        b1 = AdapterBank(model, profiles, capacity=1)
+        b1.load("tenant-lora", *tenants["tenant-lora"])
+        ref = Engine(model, params, batch_slots=2, max_len=24,
+                     bank=b1).generate(PROMPTS[:2], max_new=4,
+                                       adapter_ids=["tenant-lora", None])
+        for x, y in zip(outs, ref):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

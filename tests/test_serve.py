@@ -50,6 +50,29 @@ class TestMerge:
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4,
                                    rtol=1e-3)
 
+    @pytest.mark.parametrize("method", ["lora", "fourierft"])
+    def test_zamba2_leftover_keeps_true_method(self, method):
+        """Regression: shared-block leftovers must be rebuilt under their TRUE
+        method — the old code rebuilt any leftover as method="fourierft", so a
+        lora leftover would be misinterpreted (or crash) at apply time."""
+        model, params = _model(arch="zamba2-7b", method=method)
+        if method == "lora":
+            params["peft"] = jax.tree.map(lambda x: x + 0.02, params["peft"])
+        merged_model, merged_params = merge_for_serving(model, params)
+        assert merged_model.peft.method == method
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 10),
+                                              0, 64)}
+        a, _ = model.forward(params, batch)
+        b, _ = merged_model.forward(merged_params, batch)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4,
+                                   rtol=1e-3)
+        # and the leftover tree still carries the method's own leaves
+        shared = [v for k, v in merged_params["peft"].items()
+                  if k.startswith("shared/")]
+        assert shared
+        expect = {"lora": "lora_a", "fourierft": "c"}[method]
+        assert all(expect in d for d in shared)
+
     def test_bitfit_merge(self):
         cfg = C.reduced(C.get("qwen2.5-32b")).replace(vocab=64)
         model = build(cfg, PEFTConfig(method="bitfit"))
