@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_grad_comm",
     "benchmarks.bench_adapter_bank",
+    "benchmarks.bench_serve_scheduler",
 ]
 
 

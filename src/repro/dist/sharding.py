@@ -200,6 +200,10 @@ def cache_specs(cache: Dict, mesh: Mesh, cfg: ModelConfig,
             return P(None, b, None, _maybe(shp[3], mesh, "model"))
         if name == "ssm" and nd == 5:
             return P(None, b, _maybe(shp[2], mesh, "model"), None, None)
+        if name == "pos" and nd == 1:
+            # per-slot position vector of the persistent continuous-batching
+            # cache: (B,) — rides the batch axes like the rows it indexes
+            return P(b)
         if nd >= 2:
             return P(None, b, *([None] * (nd - 2)))
         return P()

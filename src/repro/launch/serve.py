@@ -8,11 +8,23 @@ adapter-only export in the directory (checkpoint/adapters.py) is loaded
 resident and the demo prompts round-robin over the tenants in one
 heterogeneous batch.
 
+With `--continuous`, replays a staggered-arrival, mixed-`max_new` traffic
+trace through the continuous-batching scheduler (DESIGN.md §Scheduler)
+instead of one lockstep batch: requests are admitted into slots as they
+arrive (in-flight prefill over the live decode batch), every slot stops at
+its own budget and is recycled immediately, and the run prints per-request
+outputs plus serving metrics (TTFT, mean batch occupancy, tokens/s).
+`--trace-n` sets the number of replayed requests and `--arrival-every`
+their spacing on the decode-step clock; combine with `--bank-dir` to
+replay multi-tenant traffic with LRU residency handled at admission.
+
 Laptop-scale demo:
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --adapters /tmp/ft   # dir written by repro.launch.train
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --bank-dir /tmp/tenants --bank-capacity 8
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --continuous --trace-n 12 --arrival-every 2
 """
 from __future__ import annotations
 
@@ -47,6 +59,14 @@ def main(argv=None):
     ap.add_argument("--bank-capacity", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--continuous", action="store_true",
+                    help="replay a staggered-arrival trace through the "
+                         "continuous-batching scheduler (slot recycling + "
+                         "in-flight prefill) and print serving metrics")
+    ap.add_argument("--trace-n", type=int, default=12,
+                    help="--continuous: number of replayed requests")
+    ap.add_argument("--arrival-every", type=float, default=2.0,
+                    help="--continuous: arrival gap in decode steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
@@ -106,6 +126,31 @@ def main(argv=None):
                for i in range(slots)]
     if cfg.n_codebooks:
         prompts = [jnp.tile(p[:, None], (1, cfg.n_codebooks)) for p in prompts]
+    if args.continuous:
+        from repro.serve import ContinuousScheduler
+        from repro.serve.engine import Request
+        sched = ContinuousScheduler(engine)
+        n = args.trace_n
+        reqs = [Request(prompt=prompts[i % len(prompts)],
+                        max_new=1 + (5 * i + 3) % args.max_new,
+                        adapter_id=(tenant_ids[i % len(tenant_ids)]
+                                    if tenant_ids else None))
+                for i in range(n)]
+        arrivals = [i * args.arrival_every for i in range(n)]
+        sched.serve(reqs, arrivals)
+        for i, r in enumerate(reqs):
+            tag = f" [{r.adapter_id}]" if r.adapter_id else ""
+            print(f"request {i}{tag} (arrival {arrivals[i]:g}, "
+                  f"max_new {r.max_new}): {r.out}")
+        s = sched.metrics.summary()
+        print(f"continuous: {s['n_requests']:.0f} requests, "
+              f"{s['total_tokens']:.0f} tokens in {s['steps']:.0f} steps | "
+              f"occupancy {s['occupancy_mean']:.2f}, "
+              f"ttft {s['ttft_steps_mean']:.1f} steps (p90 "
+              f"{s['ttft_steps_p90']:.1f}), "
+              f"{s['tokens_per_s']:.0f} tok/s")
+        return
+
     ids = [tenant_ids[i % len(tenant_ids)] if tenant_ids else None
            for i in range(slots)] if bank else None
     outs = engine.generate(prompts, max_new=args.max_new, adapter_ids=ids)

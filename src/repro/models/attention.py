@@ -24,7 +24,11 @@ def direct_attention(q, k, v, *, causal: bool = True,
                      kv_len: Optional[jax.Array] = None) -> jax.Array:
     """q (B,Sq,H,dh), k/v (B,Skv,K,dh). Suitable for small S and for decode.
 
-    kv_len: optional dynamic valid-KV length (positions >= kv_len are masked).
+    kv_len: optional dynamic valid-KV length (positions >= kv_len are
+    masked). A scalar applies to the whole batch; a (B,) array masks each
+    row at its own length — the ragged-validity path continuous-batching
+    decode rides, where every slot of one fixed-shape cache sits at a
+    different position.
     q_offset: global position of q[0] (for causal masking during chunking or
     cached decode)."""
     B, Sq, H, dh = q.shape
@@ -40,6 +44,9 @@ def direct_attention(q, k, v, *, causal: bool = True,
         q_pos = jnp.arange(Sq) + q_offset
         mask = q_pos[:, None] >= kv_pos[None, :]
     if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 1:       # per-slot: broadcast over (K, G, Sq)
+            kv_len = kv_len.reshape(B, 1, 1, 1, 1)
         valid = kv_pos[None, :] < kv_len
         mask = valid if mask is None else (mask & valid)
     if mask is not None:

@@ -142,8 +142,43 @@ class Model:
                                  constrain=self.constrain)
 
     # ---- decode -----------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   per_slot: bool = False) -> Dict:
+        if per_slot:
+            return self._slot_mod().init_cache(self.cfg, batch, max_len,
+                                               dtype, per_slot=True)
         return self._mod.init_cache(self.cfg, batch, max_len, dtype)
+
+    # ---- per-slot cache (continuous-batching serving, DESIGN §Scheduler) --
+    def _slot_mod(self):
+        if not self.supports_slot_cache:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} ({self.cfg.name}) has no "
+                "per-slot cache path — continuous batching currently covers "
+                "the token-input transformer families (KV positions are "
+                "maskable per slot; recurrent state is not)")
+        return self._mod
+
+    @property
+    def supports_slot_cache(self) -> bool:
+        """True when the family supports the per-slot decode cache: ragged
+        per-slot kv_len masking over one fixed-shape KV cache plus the
+        write_slot/reset_slots lifecycle (token-input transformer families;
+        recurrent families carry un-maskable state, vlm feeds embeds)."""
+        return (hasattr(self._mod, "write_slot_cache")
+                and self.cfg.embed_inputs and not self.cfg.n_codebooks)
+
+    def write_slot(self, cache: Dict, slot_cache: Dict, slot, length) -> Dict:
+        """In-flight prefill: splice a primed batch-1 scratch cache into slot
+        row `slot` (position <- `length`) while every other slot keeps
+        decoding. `slot`/`length` trace as scalars — one compiled splice per
+        scratch length serves all slots."""
+        return self._slot_mod().write_slot_cache(cache, slot_cache, slot,
+                                                 length)
+
+    def reset_slots(self, cache: Dict, mask) -> Dict:
+        """Retire the masked slots of a per-slot cache (positions -> 0)."""
+        return self._slot_mod().reset_slots(cache, mask)
 
     def decode_step(self, params: Dict, cache: Dict, batch: Dict):
         return self._mod.decode_step(params["base"], params["peft"], cache,

@@ -10,7 +10,11 @@
 - serving adapter bank: per-request resident adapters are gathered ONCE per
   call (outside the layer scan) and applied per slot via `bank_apply` (see
   DESIGN.md §Adapter API).
-- decode path updates a stacked KV cache (L, B, Smax, K, hd).
+- decode path updates a stacked KV cache (L, B, Smax, K, hd). With a
+  per-slot cache (init_cache(per_slot=True): pos is (B,) instead of a
+  scalar) every row decodes at its own position under ragged kv_len
+  masking, and write_slot_cache/reset_slots give the continuous-batching
+  scheduler its in-flight prefill + slot recycling (DESIGN.md §Scheduler).
 """
 from __future__ import annotations
 
@@ -213,7 +217,10 @@ def _embed(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
 def _attn_block(lp: Dict, x: jax.Array, cfg: ModelConfig, linear,
                 positions: jax.Array, *, cache_kv=None, cache_pos=None):
     """Pre-norm attention. If cache_kv=(k,v) is given, runs the decode path
-    (append at cache_pos, attend over kv_len=cache_pos+1)."""
+    (append at cache_pos, attend over kv_len=cache_pos+1). A scalar
+    cache_pos is the lockstep batch; a (B,) cache_pos is the per-slot path
+    (continuous batching): each row writes its token at its own position
+    and attends its own ragged kv_len."""
     B = x.shape[0]
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     q = linear(lp, "wq", h).reshape(B, -1, cfg.n_heads, cfg.head_dim)
@@ -230,8 +237,25 @@ def _attn_block(lp: Dict, x: jax.Array, cfg: ModelConfig, linear,
         new_kv = (k, v)        # post-RoPE, as stored by the decode path
     else:
         ck, cv = cache_kv
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        else:
+            # per-slot scatter: row i writes at its own position. Clamp keeps
+            # retired slots in-bounds — their rows are dead (kv_len masks
+            # them; the next prime overwrites them). rows is an iota, so the
+            # scatter hints (sorted/unique/in-bounds) apply and XLA lowers
+            # this close to the lockstep dynamic_update_slice.
+            idx = jnp.minimum(cache_pos, ck.shape[1] - 1)
+            rows = jnp.arange(B)
+            ck = ck.at[rows, idx].set(k[:, 0].astype(ck.dtype),
+                                      indices_are_sorted=True,
+                                      unique_indices=True,
+                                      mode="promise_in_bounds")
+            cv = cv.at[rows, idx].set(v[:, 0].astype(cv.dtype),
+                                      indices_are_sorted=True,
+                                      unique_indices=True,
+                                      mode="promise_in_bounds")
         att = attn_mod.direct_attention(q, ck, cv, causal=False,
                                         kv_len=cache_pos + 1)
         new_kv = (ck, cv)
@@ -322,7 +346,14 @@ def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
             constrain=None, bank=None,
             bank_profiles=None) -> Tuple[jax.Array, Dict]:
     """Process a (B, S) prompt against a fresh cache (pos must be 0).
-    Returns (next_tokens after the last prompt token, cache at pos=S)."""
+    Returns (next_tokens after the last prompt token, cache at pos=S).
+
+    batch["true_len"] (B,), optional: per-row real prompt length for
+    right-padded prompts — next_tokens are read at position true_len-1
+    instead of S-1, which makes a padded prefill EXACT for the valid rows
+    (causality keeps positions < true_len independent of the pad tail; the
+    pad tail's KV rows must then be masked by the caller via per-slot
+    kv_len, see the continuous scheduler's prime path)."""
     x = _embed(params, cfg, batch)
     B, S = x.shape[0], x.shape[1]
     positions = batch.get("positions")
@@ -351,7 +382,12 @@ def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     (x, ck, cv), _ = jax.lax.scan(
         body, (x, cache["k"], cache["v"]),
         (eff_layers, jnp.arange(cfg.num_layers, dtype=jnp.int32)))
-    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    true_len = batch.get("true_len")
+    if true_len is None:
+        x = x[:, -1:]
+    else:
+        x = x[jnp.arange(B), true_len - 1][:, None]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if cfg.n_codebooks:
         logits = jnp.einsum("bsd,cdv->bscv", x, params["lm_head"])
     else:
@@ -365,13 +401,44 @@ def prefill(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Dict:
+               dtype=jnp.bfloat16, per_slot: bool = False) -> Dict:
+    """per_slot=True allocates a (B,) position vector instead of the scalar
+    — the persistent continuous-batching cache where every slot advances
+    independently (decode_step picks the per-slot path off pos's rank)."""
     L = cfg.num_layers
     return {
         "k": jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
         "v": jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
+
+
+def write_slot_cache(cache: Dict, slot_cache: Dict, slot, length) -> Dict:
+    """In-flight prefill splice: write one primed request's KV (a batch-1
+    scratch cache, P <= max_len rows) into slot row `slot` of a live
+    per-slot cache and set that slot's position to `length`. Every other
+    slot's rows and position are untouched, so the rest of the batch keeps
+    decoding across the insertion; `slot`/`length` are traced scalars, so
+    one compiled splice per scratch length serves every slot."""
+    if cache["pos"].ndim != 1:
+        raise ValueError("write_slot_cache needs a per_slot=True cache")
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], slot_cache["k"].astype(cache["k"].dtype),
+        (0, slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], slot_cache["v"].astype(cache["v"].dtype),
+        (0, slot, 0, 0, 0))
+    pos = cache["pos"].at[slot].set(jnp.asarray(length, jnp.int32))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def reset_slots(cache: Dict, mask) -> Dict:
+    """Retire slots: masked slots' positions return to 0 (their KV rows are
+    left as-is — dead until the next write_slot_cache overwrites them, and
+    unreadable meanwhile because kv_len masking never reaches them)."""
+    if cache["pos"].ndim != 1:
+        raise ValueError("reset_slots needs a per_slot=True cache")
+    return {**cache, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
 def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
@@ -385,7 +452,10 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     pos = cache["pos"]
     positions = batch.get("positions")
     if positions is None:
-        positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+        if pos.ndim == 0:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+        else:                       # per-slot cache: row i sits at pos[i]
+            positions = pos.astype(jnp.int32)[:, None]
     eff_layers, apps = apply_peft_to_layers(
         params["layers"], adapters, sites, peft, constrain=constrain,
         bank=bank, bank_profiles=bank_profiles,

@@ -1,1 +1,6 @@
-from repro.serve.engine import AdapterBank, Engine, Request, merge_for_serving
+from repro.serve.engine import (
+    AdapterBank, BankFullError, Engine, Request, merge_for_serving,
+)
+from repro.serve.scheduler import (
+    ContinuousScheduler, RequestQueue, ServingMetrics, SlotManager,
+)

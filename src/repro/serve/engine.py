@@ -19,6 +19,11 @@ method's bank and the factored contribution is linear in the trainables
 (zero row ⇒ exactly zero). LRU load/evict against adapter-only checkpoints
 (checkpoint/adapters.py) gives thousands-of-tenants serving at n·(2+L)
 numbers of storage per tenant — the paper's economics, end to end.
+
+The Engine itself batches in lockstep (generate / generate_requests); the
+continuous-batching runtime over the same model/params/bank — arrival
+scheduling, per-slot budgets over one persistent cache, slot recycling,
+in-flight prefill — lives in repro.serve.scheduler (DESIGN.md §Scheduler).
 """
 from __future__ import annotations
 
@@ -70,6 +75,12 @@ class Request:
     max_new: int = 16
     adapter_id: Optional[str] = None   # resident AdapterBank tenant (or base)
     out: Optional[List[int]] = None
+
+
+class BankFullError(RuntimeError):
+    """Raised by AdapterBank.load when the bank is at capacity and every
+    resident tenant is pinned (in use by a live request) — the caller must
+    defer the load until a pinned tenant's requests drain."""
 
 
 class AdapterBank:
@@ -157,11 +168,17 @@ class AdapterBank:
                 k: v.at[slot].set(jnp.zeros(v.shape[1:], v.dtype))
                 for k, v in leaves.items()}
 
-    def load(self, adapter_id: str, adapters: Dict, peft: PEFTConfig) -> int:
+    def load(self, adapter_id: str, adapters: Dict, peft: PEFTConfig,
+             pinned: Sequence[str] = ()) -> int:
         """Make `adapter_id` resident (LRU-evicting if full). `adapters` is a
         {site: {leaf: array}} tree — trainable leaves are written into the
         slot row; any frozen leaves present are validated against the group's
-        shared aux (one bank group = one entry seed)."""
+        shared aux (one bank group = one entry seed).
+
+        pinned: tenant ids that must NOT be evicted (live requests are
+        gathering their rows mid-stream — evicting one would zero the row
+        under a decoding batch). The LRU victim is the least-recently-used
+        UNPINNED resident; if every resident is pinned, BankFullError."""
         if peft.method not in self.profiles:
             raise KeyError(f"no bank group for method {peft.method!r}; "
                            f"groups: {sorted(self.profiles)}")
@@ -215,7 +232,14 @@ class AdapterBank:
         elif self._free:
             slot = self._free.pop(0)           # zero by construction
         else:
-            _, (prev_m, slot) = self._resident.popitem(last=False)  # LRU
+            victim = next((a for a in self._resident if a not in pinned),
+                          None)                # LRU order, skipping pinned
+            if victim is None:
+                raise BankFullError(
+                    f"bank is full ({self.capacity} slots) and every "
+                    f"resident tenant is pinned; cannot admit "
+                    f"{adapter_id!r} until a pinned tenant drains")
+            prev_m, slot = self._resident.pop(victim)
             self._clear_group_slot(prev_m, slot)
         for site_name, leaf, v in writes:
             rows = group["sites"][site_name][leaf]
@@ -225,7 +249,8 @@ class AdapterBank:
         return slot
 
     def load_from_checkpoint(self, adapter_id: str,
-                             directory: Optional[str] = None) -> int:
+                             directory: Optional[str] = None,
+                             pinned: Sequence[str] = ()) -> int:
         """LRU reload path: import an adapter-only export (trainables + config
         manifest) and make it resident."""
         from repro.checkpoint import adapters as adapter_ckpt
@@ -233,7 +258,7 @@ class AdapterBank:
         if directory is None:
             raise ValueError("no checkpoint directory configured")
         tree, peft = adapter_ckpt.import_adapter(directory, adapter_id)
-        return self.load(adapter_id, tree, peft)
+        return self.load(adapter_id, tree, peft, pinned=pinned)
 
     def evict(self, adapter_id: str) -> None:
         mname, slot = self._resident.pop(adapter_id)
@@ -302,15 +327,33 @@ class Engine:
         # one compiled graph per prompt length (padded batches share it)
         self._prefill = jax.jit(model.prefill)
 
-    def _fresh_cache(self):
+    def _fresh_cache(self, per_slot: bool = False):
         cache = self.model.init_cache(self.batch, self.max_len,
-                                      dtype=jnp.dtype(self.model.cfg.dtype))
+                                      dtype=jnp.dtype(self.model.cfg.dtype),
+                                      per_slot=per_slot)
         if self.mesh is not None:
             from repro.dist import sharding as shd
             shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
             specs = shd.cache_specs(cache, self.mesh, self.model.cfg, shape)
             cache = jax.device_put(cache, shd.named(cache, specs, self.mesh))
         return cache
+
+    def _batch_extra(self, adapter_ids: Optional[Sequence[Optional[str]]]):
+        """(params incl. bank rows, per-call batch extras) for one call's
+        per-request adapter ids, None-padded to the engine's slot count.
+        Shared by generate/generate_requests and the continuous scheduler
+        so the three paths cannot diverge on bank wiring."""
+        B = self.batch
+        params = self.params
+        extra: Dict = {}
+        if self.bank is not None:
+            ids = list(adapter_ids or [])
+            ids += [None] * (B - len(ids))
+            extra["adapter_slots"] = self.bank.slot_rows(ids, B)
+            params = {**params, "bank": self.bank.params}
+        elif adapter_ids is not None and any(a is not None for a in adapter_ids):
+            raise ValueError("adapter_ids given but the engine has no bank")
+        return params, extra
 
     def generate(self, prompts: List[jax.Array], max_new: int = 16,
                  stepwise_prefill: bool = False,
@@ -323,6 +366,12 @@ class Engine:
 
         stepwise_prefill: legacy token-by-token teacher-forced prefill
         (reference path for the equivalence test; S decode dispatches)."""
+        if not prompts:
+            raise ValueError("generate() needs at least one prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if any(int(p.shape[0]) < 1 for p in prompts):
+            raise ValueError("generate() got an empty (length-0) prompt")
         assert len(prompts) <= self.batch
         if adapter_ids is not None and len(adapter_ids) != len(prompts):
             # fail closed: a silently None-padded tail would serve those
@@ -330,15 +379,7 @@ class Engine:
             raise ValueError(f"{len(adapter_ids)} adapter_ids for "
                              f"{len(prompts)} prompts")
         B = self.batch
-        params = self.params
-        extra: Dict = {}
-        if self.bank is not None:
-            ids = list(adapter_ids or [])
-            ids += [None] * (B - len(ids))
-            extra["adapter_slots"] = self.bank.slot_rows(ids, B)
-            params = {**params, "bank": self.bank.params}
-        elif adapter_ids is not None and any(a is not None for a in adapter_ids):
-            raise ValueError("adapter_ids given but the engine has no bank")
+        params, extra = self._batch_extra(adapter_ids)
         plen = max(int(p.shape[0]) for p in prompts)
         toks = jnp.zeros((B, plen) + prompts[0].shape[1:], jnp.int32)
         for i, p in enumerate(prompts):
@@ -363,13 +404,68 @@ class Engine:
         gen = jnp.stack(outs, axis=1)                     # (B, max_new, ...)
         return [gen[i] for i in range(len(prompts))]
 
-    def generate_requests(self, requests: List[Request]):
-        """Request-object front end: one heterogeneous-adapter batch."""
+    def generate_requests(self, requests: List[Request],
+                          eos_id: Optional[int] = None):
+        """Request-object front end: FCFS lockstep chunks of `batch_slots`
+        heterogeneous-adapter requests (any count — chunks run serially).
+
+        Per-request completion (budget exhausted, or `eos_id` emitted) is
+        tracked through the scheduler's SlotManager — the same shared logic
+        the continuous runtime uses — so a finished request stops
+        contributing tokens, and the chunk's decode loop exits as soon as
+        EVERY slot is done instead of always paying max(r.max_new) steps.
+        Lockstep chunks cannot recycle a freed slot mid-flight; for that
+        (plus arrival scheduling and in-flight prefill) use
+        repro.serve.scheduler.ContinuousScheduler."""
         if not requests:
             return requests
-        max_new = max(r.max_new for r in requests)
-        outs = self.generate([r.prompt for r in requests], max_new=max_new,
-                             adapter_ids=[r.adapter_id for r in requests])
-        for r, o in zip(requests, outs):
-            r.out = [int(t) for t in np.asarray(o[:r.max_new]).reshape(-1)]
+        for r in requests:
+            if r.max_new < 1:
+                raise ValueError(f"request max_new must be >= 1, "
+                                 f"got {r.max_new}")
+            if int(r.prompt.shape[0]) < 1:
+                raise ValueError("request with an empty (length-0) prompt")
+        for at in range(0, len(requests), self.batch):
+            self._lockstep_chunk(requests[at:at + self.batch], eos_id)
         return requests
+
+    def _lockstep_chunk(self, chunk: List[Request],
+                        eos_id: Optional[int]) -> None:
+        # lazy: scheduler.queue imports Request from this module
+        from repro.serve.scheduler.slots import SlotManager
+        params, extra = self._batch_extra([r.adapter_id for r in chunk])
+        B = self.batch
+        plen = max(int(r.prompt.shape[0]) for r in chunk)
+        toks = jnp.zeros((B, plen) + chunk[0].prompt.shape[1:], jnp.int32)
+        for i, r in enumerate(chunk):
+            toks = toks.at[i, :r.prompt.shape[0]].set(r.prompt)
+        last, cache = self._prefill(params, self._fresh_cache(),
+                                    {"tokens": toks, **extra})
+        sm = SlotManager(len(chunk), eos_id=eos_id)
+        for i, r in enumerate(chunk):
+            sm.acquire(i, budget=r.max_new, adapter_id=r.adapter_id)
+        taken = [0] * len(chunk)
+        history = []
+
+        def note(tokens):
+            history.append(tokens)
+            # EOS needs token VALUES on the host (one sync per step);
+            # budget-only completion stays async — dispatches pipeline.
+            arr = np.asarray(tokens) if eos_id is not None else None
+            for i in list(sm.active_slots()):
+                taken[i] += 1
+                tok = int(np.asarray(arr[i]).reshape(-1)[0]) \
+                    if arr is not None else None
+                if sm.note_token(i, tok):
+                    sm.release(i)
+
+        note(last)
+        cur = add_time_dim(last)
+        while sm.any_active():
+            nxt, cache = self._decode(params, cache,
+                                      {"tokens": cur, **extra})
+            note(nxt)
+            cur = add_time_dim(nxt)
+        gen = np.asarray(jnp.stack(history, axis=1))    # (B, T, ...)
+        for i, r in enumerate(chunk):
+            r.out = [int(t) for t in gen[i, :taken[i]].reshape(-1)]

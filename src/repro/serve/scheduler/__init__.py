@@ -1,0 +1,7 @@
+"""Continuous-batching serving runtime (DESIGN.md §Scheduler): arrival
+queue + admission policy, slot lifecycle with immediate recycling, and the
+in-flight-prefill decode loop over one persistent per-slot KV cache."""
+from repro.serve.scheduler.metrics import RequestMetrics, ServingMetrics
+from repro.serve.scheduler.queue import RequestQueue, ScheduledRequest
+from repro.serve.scheduler.runtime import ContinuousScheduler
+from repro.serve.scheduler.slots import SlotManager, SlotState

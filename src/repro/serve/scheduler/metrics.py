@@ -1,0 +1,92 @@
+"""Serving metrics for the continuous runtime (DESIGN.md §Scheduler):
+per-request TTFT, per-step batch occupancy, end-to-end tokens/s.
+
+Step-denominated stamps (arrival/admit/first token/finish) use the
+scheduler's decode-step clock — deterministic, replay-stable, and what the
+admission policy actually trades off. Wall-clock covers the whole drain
+(prefills, bank loads, dispatch overhead), so tokens_per_s is honest
+end-to-end throughput, not a per-step extrapolation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    arrival: float
+    admitted: Optional[float] = None
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft_steps(self) -> Optional[float]:
+        """Decode steps between arrival and first emitted token (the prime
+        prefill emits it, so admission == first token on this clock)."""
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+
+class ServingMetrics:
+    def __init__(self):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.occupancy: List[float] = []       # active/slots per decode step
+        self.steps = 0
+        self.wall_s = 0.0
+        self._t0: Optional[float] = None
+
+    # ---- lifecycle hooks (called by the runtime) --------------------------
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+
+    def stop(self) -> None:
+        if self._t0 is not None:
+            self.wall_s += time.perf_counter() - self._t0
+            self._t0 = None
+
+    def on_arrival(self, rid: int, t: float) -> None:
+        self.requests[rid] = RequestMetrics(arrival=t)
+
+    def on_admit(self, rid: int, t: float) -> None:
+        self.requests[rid].admitted = t
+
+    def on_token(self, rid: int, t: float) -> None:
+        r = self.requests[rid]
+        r.n_tokens += 1
+        if r.first_token is None:
+            r.first_token = t
+
+    def on_finish(self, rid: int, t: float) -> None:
+        self.requests[rid].finished = t
+
+    def on_step(self, active: int, slots: int) -> None:
+        self.steps += 1
+        self.occupancy.append(active / slots)
+
+    # ---- aggregates -------------------------------------------------------
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.n_tokens for r in self.requests.values())
+
+    def summary(self) -> Dict[str, float]:
+        ttfts = sorted(r.ttft_steps for r in self.requests.values()
+                       if r.ttft_steps is not None)
+        occ = self.occupancy
+        wall = self.wall_s if self._t0 is None \
+            else self.wall_s + (time.perf_counter() - self._t0)
+        return {
+            "n_requests": len(self.requests),
+            "total_tokens": self.total_tokens,
+            "steps": self.steps,
+            "occupancy_mean": sum(occ) / len(occ) if occ else 0.0,
+            "ttft_steps_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_steps_p90": ttfts[int(0.9 * (len(ttfts) - 1))]
+            if ttfts else 0.0,
+            "wall_s": wall,
+            "tokens_per_s": self.total_tokens / wall if wall > 0 else 0.0,
+        }

@@ -1,0 +1,92 @@
+"""Arrival queue + admission policy for the continuous scheduler
+(DESIGN.md §Scheduler).
+
+Requests enter with an `arrival` stamp on the scheduler's decode-step clock
+(a traffic replay: arrival 7.0 means the request becomes visible once 7
+decode steps have run). Admission walks the ARRIVED requests in policy
+order and offers each to an `admit` callback — the runtime's callback does
+the bank work (touch resident / load_from_checkpoint with the live pin
+set) and turns a request down only when its tenant cannot be made resident
+right now (BankFullError), in which case the next arrived request gets the
+free slot instead of head-of-line blocking it.
+"""
+from __future__ import annotations
+
+import bisect
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Collection, List, Optional
+
+from repro.serve.engine import Request
+
+
+@dataclass
+class ScheduledRequest:
+    """A queued request plus its scheduling identity/stamps."""
+    request: Request
+    rid: int
+    arrival: float = 0.0
+
+
+class RequestQueue:
+    """Arrival-ordered queue with a pluggable admission policy.
+
+    policy:
+      "fcfs"           arrived requests are offered strictly in arrival
+                       order (ties by submission order);
+      "resident_first" among arrived requests, those whose tenant is
+                       already bank-resident go first (avoids checkpoint
+                       loads and LRU churn under tenant-heavy traffic);
+                       falls back to fcfs order within each class.
+    """
+
+    POLICIES = ("fcfs", "resident_first")
+
+    def __init__(self, policy: str = "fcfs"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"one of {self.POLICIES}")
+        self.policy = policy
+        self._pending: List[ScheduledRequest] = []   # arrival-sorted, stable
+        self._rids = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending(self) -> List[ScheduledRequest]:
+        return list(self._pending)
+
+    def push(self, request: Request, arrival: float = 0.0) -> int:
+        rid = next(self._rids)
+        sr = ScheduledRequest(request, rid, float(arrival))
+        # rids are monotone, so (arrival, rid) keeps insertion stable
+        bisect.insort(self._pending, sr,
+                      key=lambda s: (s.arrival, s.rid))
+        return rid
+
+    def arrived(self, now: float) -> List[ScheduledRequest]:
+        return [sr for sr in self._pending if sr.arrival <= now]
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest pending arrival stamp (the idle-skip target), or None."""
+        return self._pending[0].arrival if self._pending else None
+
+    def pop_next(self, now: float,
+                 admit: Callable[[ScheduledRequest], bool],
+                 resident: Collection[str] = ()) -> Optional[ScheduledRequest]:
+        """Offer arrived requests to `admit` in policy order; remove and
+        return the first accepted one (None when nothing arrived or every
+        arrived request was turned down this cycle)."""
+        order = self.arrived(now)
+        if self.policy == "resident_first":
+            resident = set(resident)
+            order = sorted(          # stable: fcfs within each class
+                order, key=lambda sr: (sr.request.adapter_id is not None
+                                       and sr.request.adapter_id
+                                       not in resident))
+        for sr in order:
+            if admit(sr):
+                self._pending.remove(sr)
+                return sr
+        return None

@@ -1,0 +1,269 @@
+"""Continuous-batching runtime over the slot Engine (DESIGN.md §Scheduler).
+
+One persistent fixed-shape per-slot KV cache (`Model.init_cache(...,
+per_slot=True)`): every slot decodes at its own position/ragged kv_len,
+requests are admitted into FREE slots the moment both a slot and the slot's
+tenant row are available, and a slot is recycled the very step its request
+completes. In-flight prefill primes a single slot — a batch-1 prefill over
+the prompt's pow2 bucket, spliced into the live cache with
+`Model.write_slot` — while the other slots keep decoding. All steady-state
+shapes are fixed: the decode graph NEVER recompiles as requests come and
+go; prefill/splice compile once per pow2 prompt bucket.
+
+Admission is adapter-bank-aware: a request's tenant is touched when
+resident, loaded via `load_from_checkpoint` when not, with the tenants of
+live slots pinned against LRU eviction (evicting one would zero the bank
+row under a decoding batch). A request whose tenant cannot be made
+resident right now waits, without head-of-line blocking the rest of the
+queue.
+
+Outputs are EXACT per request — bit-identical (fp32) to
+`Engine.generate` run one request at a time: the prime prefill computes the
+prompt at its true positions (`true_len` logits gather), pad-tail KV rows
+are never readable (per-slot kv_len), and every decode einsum is
+row-parallel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import BankFullError, Engine, Request
+from repro.serve.scheduler.metrics import ServingMetrics
+from repro.serve.scheduler.queue import RequestQueue, ScheduledRequest
+from repro.serve.scheduler.slots import SlotManager
+
+Event = Tuple  # ("admit", rid, slot, t) | ("token", rid, tok, t) | ("done", rid, toks, t)
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power of two >= n (floored at `lo`): bounds prime-prefill
+    compilations at log2(max_len) graphs under arbitrary prompt lengths."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+class ContinuousScheduler:
+    """Continuous-batching front end over an Engine's model/params/bank.
+
+    eos_id:  optional stop token — a slot completes on emitting it (the
+             token is included in the output). Forces one host sync per
+             decode step; budget-only traffic stays async.
+    policy:  RequestQueue admission order ("fcfs" | "resident_first").
+    bucket:  pad prime prefills to pow2 prompt buckets (bounded compile
+             count); False compiles per distinct prompt length instead.
+
+    Streaming API: `events()` yields ("admit", rid, slot, t),
+    ("token", rid, token, t) and ("done", rid, tokens, t) tuples as they
+    happen; `serve(requests, arrivals)` replays a trace and returns the
+    requests with `.out` filled. `metrics` accumulates TTFT / occupancy /
+    tokens-per-s (ServingMetrics).
+    """
+
+    def __init__(self, engine: Engine, eos_id: Optional[int] = None,
+                 policy: str = "fcfs", bucket: bool = True):
+        if not engine.model.supports_slot_cache:
+            raise NotImplementedError(
+                f"{engine.model.cfg.name}: continuous batching needs the "
+                "per-slot cache path (token-input transformer families)")
+        self.engine = engine
+        self.model = engine.model
+        self.bank = engine.bank
+        self.n_slots = engine.batch
+        self.max_len = engine.max_len
+        self.eos_id = eos_id
+        self.bucket = bucket
+        self.queue = RequestQueue(policy)
+        self.slots = SlotManager(self.n_slots, eos_id=eos_id)
+        self.metrics = ServingMetrics()
+        self.t = 0.0                           # decode-step clock
+        self._decode = engine._decode          # shared jit: per-slot trace
+        self._prefill = engine._prefill        # shared jit: (1, P) traces
+        self._write = jax.jit(self.model.write_slot, donate_argnums=(0,))
+        self._reset = jax.jit(self.model.reset_slots, donate_argnums=(0,))
+        self.cache = engine._fresh_cache(per_slot=True)
+        self._cache_dtype = jnp.dtype(self.model.cfg.dtype)
+        self._sr: List[Optional[ScheduledRequest]] = [None] * self.n_slots
+        self._last = [0] * self.n_slots        # per-slot last token (host)
+        self._outs: Dict[int, List[int]] = {}
+        self._stale = set()                    # freed, not yet reset slots
+
+    # ---- submission -------------------------------------------------------
+    def submit(self, request: Request, arrival: float = 0.0) -> int:
+        """Queue a request; `arrival` is on the decode-step clock (traffic
+        replay). Returns the request id used in events/metrics."""
+        if request.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {request.max_new}")
+        S = int(request.prompt.shape[0])
+        if S < 1:
+            raise ValueError("empty (length-0) prompt")
+        if S + request.max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({S}) + max_new ({request.max_new}) tokens exceed "
+                f"the persistent cache's max_len ({self.max_len})")
+        if request.adapter_id is not None and self.bank is None:
+            raise ValueError("request has an adapter_id but the engine "
+                             "has no bank")
+        rid = self.queue.push(request, arrival)
+        self.metrics.on_arrival(rid, float(arrival))
+        return rid
+
+    def reset_metrics(self) -> None:
+        """Fresh metrics AND a rewound decode-step clock for a new trace
+        replay (compiled graphs stay warm). Only meaningful between drains —
+        rewinding under live requests would corrupt their stamps."""
+        if self.slots.any_active() or len(self.queue):
+            raise RuntimeError("reset_metrics with requests in flight")
+        self.metrics = ServingMetrics()
+        self.t = 0.0
+
+    # ---- admission --------------------------------------------------------
+    def _ensure_resident(self, sr: ScheduledRequest) -> bool:
+        """Make the request's tenant bank-resident (admission side effect).
+        False = defer: the bank is full of pinned (live) tenants."""
+        aid = sr.request.adapter_id
+        if aid is None:
+            return True
+        if aid in self.bank.resident_ids:
+            self.bank.touch(aid)
+            return True
+        pinned = [a for a in self.slots.adapter_ids() if a is not None]
+        try:
+            self.bank.load_from_checkpoint(aid, pinned=pinned)
+        except BankFullError:
+            return False
+        return True
+
+    def _prime(self, sr: ScheduledRequest, slot: int) -> int:
+        """In-flight prefill: run the prompt through a batch-1 scratch
+        prefill and splice its KV into `slot` of the live cache. Returns the
+        first generated token."""
+        prompt = sr.request.prompt
+        S = int(prompt.shape[0])
+        # clamp to max_len: submit() guarantees S < max_len, but the pow2
+        # bucket of a near-max prompt can overshoot a non-pow2 cache
+        P = min(_bucket(S), self.max_len) if self.bucket else S
+        toks = jnp.zeros((1, P), jnp.int32).at[0, :S].set(prompt)
+        batch: Dict = {"tokens": toks}
+        if P != S:
+            batch["true_len"] = jnp.full((1,), S, jnp.int32)
+        params = self.engine.params
+        if self.bank is not None:
+            batch["adapter_slots"] = self.bank.slot_rows(
+                [sr.request.adapter_id], 1)
+            params = {**params, "bank": self.bank.params}
+        scratch = self.model.init_cache(1, P, dtype=self._cache_dtype)
+        nt, scratch = self._prefill(params, scratch, batch)
+        self.cache = self._write(
+            self.cache, {"k": scratch["k"], "v": scratch["v"]}, slot, S)
+        return int(np.asarray(nt).reshape(-1)[0])
+
+    def _admit_ready(self) -> Iterator[Event]:
+        while self.slots.free_slots() and len(self.queue):
+            resident = self.bank.resident_ids if self.bank else ()
+            sr = self.queue.pop_next(self.t, self._ensure_resident,
+                                     resident=resident)
+            if sr is None:
+                return
+            slot = self.slots.acquire(sr.rid, budget=sr.request.max_new,
+                                      adapter_id=sr.request.adapter_id,
+                                      prompt_len=int(sr.request.prompt.shape[0]))
+            self._sr[slot] = sr
+            self.metrics.on_admit(sr.rid, self.t)
+            tok = self._prime(sr, slot)
+            self._outs[sr.rid] = [tok]
+            self._last[slot] = tok
+            self.metrics.on_token(sr.rid, self.t)
+            yield ("admit", sr.rid, slot, self.t)
+            yield ("token", sr.rid, tok, self.t)
+            if self.slots.note_token(slot, tok):
+                yield self._finish(slot)
+
+    def _finish(self, slot: int) -> Event:
+        sr = self._sr[slot]
+        self._sr[slot] = None
+        self._last[slot] = 0
+        self.slots.release(slot)
+        self._stale.add(slot)          # reset is batched into the next step
+        toks = self._outs.pop(sr.rid)
+        sr.request.out = toks
+        self.metrics.on_finish(sr.rid, self.t)
+        return ("done", sr.rid, toks, self.t)
+
+    # ---- decode -----------------------------------------------------------
+    def _flush_stale(self) -> None:
+        """One batched reset for slots freed since the last step; slots that
+        were already re-primed (write_slot set their position) drop out."""
+        stale = self._stale & set(self.slots.free_slots())
+        self._stale.clear()
+        if stale:
+            mask = np.zeros((self.n_slots,), bool)
+            mask[list(stale)] = True
+            self.cache = self._reset(self.cache, mask)
+
+    def _decode_once(self) -> Iterator[Event]:
+        self._flush_stale()
+        active = self.slots.active_slots()
+        params, extra = self.engine.params, {}
+        if self.bank is not None:
+            extra["adapter_slots"] = self.bank.slot_rows(
+                self.slots.adapter_ids(), self.n_slots)
+            params = {**params, "bank": self.bank.params}
+        toks = jnp.asarray(np.asarray(self._last, np.int32)[:, None])
+        nt, self.cache = self._decode(params, self.cache,
+                                      {"tokens": toks, **extra})
+        self.t += 1
+        self.metrics.on_step(len(active), self.n_slots)
+        arr = np.asarray(nt)
+        for slot in active:
+            sr = self._sr[slot]
+            tok = int(arr[slot])
+            self._outs[sr.rid].append(tok)
+            self._last[slot] = tok
+            self.metrics.on_token(sr.rid, self.t)
+            yield ("token", sr.rid, tok, self.t)
+            if self.slots.note_token(slot, tok):
+                yield self._finish(slot)
+
+    # ---- main loop --------------------------------------------------------
+    def events(self) -> Iterator[Event]:
+        """Drain the queue: admit -> decode -> recycle until no request is
+        pending or in flight, yielding the event stream. Re-entrant across
+        drains (the persistent cache and clock carry over), but only one
+        events() iterator may be live at a time."""
+        self.metrics.start()
+        try:
+            while len(self.queue) or self.slots.any_active():
+                yield from self._admit_ready()
+                if not self.slots.any_active():
+                    nxt = self.queue.next_arrival()
+                    if nxt is None:
+                        break
+                    if nxt > self.t:       # idle: skip to the next arrival
+                        self.t = nxt
+                        continue
+                    raise RuntimeError(
+                        "scheduler stalled: arrived requests cannot be "
+                        "admitted although every slot is free")
+                yield from self._decode_once()
+        finally:
+            self.metrics.stop()
+
+    def serve(self, requests: Sequence[Request],
+              arrivals: Optional[Sequence[float]] = None) -> List[Request]:
+        """Traffic replay: submit every request (arrivals on the decode-step
+        clock, default all-at-0) and drain. Returns the requests with `.out`
+        filled, in input order."""
+        if arrivals is not None and len(arrivals) != len(requests):
+            raise ValueError(f"{len(arrivals)} arrivals for "
+                             f"{len(requests)} requests")
+        for i, r in enumerate(requests):
+            self.submit(r, arrivals[i] if arrivals is not None else 0.0)
+        for _ in self.events():
+            pass
+        return list(requests)

@@ -1,0 +1,120 @@
+"""Slot lifecycle for the serving runtimes (DESIGN.md §Scheduler).
+
+State machine (per slot of the fixed-shape batch):
+
+    FREE --acquire--> ACTIVE --note_token x N--> (budget 0 | EOS) --release--> FREE
+
+`SlotManager` owns the invariants both runtimes rely on:
+
+- **no double assignment** — acquire only ever hands out a FREE slot and
+  refuses a rid that is already active (RuntimeError, not silent reuse);
+- **exact budgets** — a request records precisely min(max_new, tokens
+  through EOS) tokens: note_token decrements the budget and reports
+  completion the step it hits zero or emits `eos_id`;
+- **recycling is immediate** — release returns the slot to FREE the same
+  scheduler step its request completes.
+
+The lockstep engine (Engine.generate_requests) and the continuous runtime
+(scheduler.runtime) both complete requests through note_token/release, so
+"stop contributing once budget or EOS is hit" is one shared code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional
+
+FREE = "FREE"
+ACTIVE = "ACTIVE"
+
+
+@dataclass
+class SlotState:
+    state: str = FREE
+    rid: Optional[int] = None          # request id of the occupant
+    adapter_id: Optional[str] = None   # bank tenant the occupant gathers
+    budget: int = 0                    # tokens still owed (> 0 iff ACTIVE)
+    taken: int = 0                     # tokens recorded for the occupant
+    prompt_len: int = 0                # cache row position = prompt_len +
+                                       # taken - 1 (last token never written);
+                                       # the jax cache's pos vector is the
+                                       # source of truth
+
+
+class SlotManager:
+    """Tracks per-slot occupancy/budget for a fixed pool of decode slots."""
+
+    def __init__(self, n_slots: int, eos_id: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.eos_id = eos_id
+        self._slots = [SlotState() for _ in range(n_slots)]
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def state(self, slot: int) -> SlotState:
+        return self._slots[slot]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.state == FREE]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.state == ACTIVE]
+
+    def any_active(self) -> bool:
+        return any(s.state == ACTIVE for s in self._slots)
+
+    def occupancy(self) -> float:
+        return len(self.active_slots()) / len(self._slots)
+
+    def adapter_ids(self) -> List[Optional[str]]:
+        """Per-slot tenant ids (None for FREE slots / bank-less requests) —
+        exactly the `adapter_slots` gather order of the decode batch, and
+        the pin set protecting live tenants from LRU eviction."""
+        return [s.adapter_id if s.state == ACTIVE else None
+                for s in self._slots]
+
+    def acquire(self, rid: int, budget: int,
+                adapter_id: Optional[str] = None,
+                prompt_len: int = 0) -> int:
+        """Assign the lowest FREE slot to request `rid`. Raises RuntimeError
+        when no slot is free or `rid` is already assigned (a double
+        assignment would interleave two requests' tokens in one KV row)."""
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        if any(s.state == ACTIVE and s.rid == rid for s in self._slots):
+            raise RuntimeError(f"request {rid} is already assigned a slot")
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        slot = free[0]
+        self._slots[slot] = SlotState(state=ACTIVE, rid=rid,
+                                      adapter_id=adapter_id, budget=budget,
+                                      taken=0, prompt_len=prompt_len)
+        return slot
+
+    def note_token(self, slot: int, token: Optional[int] = None) -> bool:
+        """Record one generated token for `slot`; True when the request is
+        done (budget exhausted, or `token` == eos_id — the EOS token itself
+        is included in the output). `token` may be None only when the
+        manager has no eos_id (budget-only completion needs no values)."""
+        s = self._slots[slot]
+        if s.state != ACTIVE:
+            raise RuntimeError(f"note_token on {s.state} slot {slot}")
+        if self.eos_id is not None and token is None:
+            raise RuntimeError("eos_id is set: note_token needs the token")
+        s.taken += 1
+        s.budget -= 1
+        return s.budget <= 0 or (self.eos_id is not None
+                                 and token == self.eos_id)
+
+    def release(self, slot: int) -> SlotState:
+        """Recycle `slot` (ACTIVE -> FREE); returns the occupant's final
+        state snapshot."""
+        s = self._slots[slot]
+        if s.state != ACTIVE:
+            raise RuntimeError(f"release of {s.state} slot {slot}")
+        snapshot = dataclasses.replace(s)
+        self._slots[slot] = SlotState()
+        return snapshot
