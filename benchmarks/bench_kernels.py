@@ -1,14 +1,20 @@
 """Kernel benchmarks: einsum vs FFT materialization paths (CPU wall time) +
-interpret-mode Pallas correctness cross-check, plus the merged-vs-factored
-strategy flop model from DESIGN §2."""
+interpret-mode Pallas correctness cross-check, the merged-vs-factored
+strategy flop model from DESIGN §2, and the kernel-registry backend
+comparison (DESIGN §Kernels) — per spectral method, which backend the auto
+policy selects on this host (compiled Pallas on TPU) and how the accelerated
+path times against the einsum reference."""
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
+from repro.core.adapter import AdapterSite
 from repro.core.fourierft import factored_apply, materialize_delta, sample_entries
-from repro.kernels import ops, ref
+from repro.kernels import api, ops, ref
 from benchmarks.common import emit
 
 
@@ -19,6 +25,63 @@ def timeit(fn, *args, iters=10):
         out = fn(*args)
     out.block_until_ready()
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_backends(d1=768, d2=768, n=1000, tokens=512):
+    """Registry comparison: per spectral method × op, report the backend the
+    auto policy resolves on this host, time einsum vs the accelerated path
+    where it is compiled (TPU pallas / any-platform FFT), and cross-check
+    interpret-mode outputs against einsum at fp32 tolerance."""
+    site = AdapterSite("layers/wq", d1, d2, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, d1))
+    for mname in ("fourierft", "dct", "circulant"):
+        m = adapter_api.resolve(mname)
+        peft = PEFTConfig(method=mname, n=n, alpha=300.0,
+                          param_dtype="float32")
+        ad = m.init_site(jax.random.PRNGKey(0), site, peft)
+        ad = {k: (v + 0.1 if jnp.issubdtype(v.dtype, jnp.floating) else v)
+              for k, v in ad.items()}
+        tr = {k: ad[k][0] for k in m.trainable_leaves(peft)}
+        aux = {k: v for k, v in ad.items()
+               if k not in m.trainable_leaves(peft)}
+        for op in api.ops_for(m):
+            resolved = api.resolve_op(op, m, peft, d1, d2)
+            emit(f"kernels/policy_{mname}_{op}", 0.0,
+                 f"auto->{resolved.backend}")
+
+        def run(op, backend):
+            """jitted hot-path fn of the trainables (traced, NOT closed-over
+            constants — a captured kernel would let XLA constant-fold the
+            whole materialization out of the timing)."""
+            p = peft.replace(kernel_backend=backend)
+            if op == "deltaw":
+                return jax.jit(lambda t: m.site_delta({**ad, **t}, site, p))
+            return jax.jit(
+                lambda t, xx: m.factored_apply(xx, t, aux, d1, d2, p))
+
+        # time the op that carries each method's hot path: deltaw for the
+        # spectral-coefficient methods (merged train/serve), the factored
+        # apply for circulant (its acceleration is the FFT bypass)
+        hot = "deltaw" if "deltaw" in api.ops_for(m) \
+            and mname != "circulant" else "factored_apply"
+        tr_stack = {k: ad[k] for k in m.trainable_leaves(peft)}
+        args = (tr_stack,) if hot == "deltaw" else (tr, x)
+        ref_fn = run(hot, "einsum")
+        us_ref = timeit(ref_fn, *args, iters=5)
+        emit(f"kernels/{hot}_{mname}_einsum_{d1}", us_ref, "reference")
+        auto = api.resolve_op(hot, m, peft, d1, d2)
+        if auto.backend != "einsum":        # compiled pallas (TPU) or FFT
+            us_acc = timeit(run(hot, "auto"), *args, iters=5)
+            emit(f"kernels/{hot}_{mname}_{auto.backend}_{d1}", us_acc,
+                 f"speedup={us_ref / max(us_acc, 1e-9):.2f}x")
+        # interpret-mode fp32 cross-check (the CI conformance gate's numbers)
+        itp = api.resolve_op(hot, m, peft.replace(kernel_backend="interpret"),
+                             d1, d2)
+        if itp.backend == "interpret":
+            err = float(jnp.abs(jnp.asarray(run(hot, "interpret")(*args))
+                                - jnp.asarray(ref_fn(*args))).max())
+            emit(f"kernels/{hot}_{mname}_interpret_allclose", 0.0,
+                 f"err={err:.2e}")
 
 
 def main():
@@ -35,7 +98,7 @@ def main():
     emit("kernels/materialize_einsum_768", us_e, f"err_vs_fft={err:.2e}")
     emit("kernels/materialize_fft_768", us_f, "paper_literal_path")
 
-    k = ops.fourier_deltaw(c, E, d1, d2, 300.0, use_pallas="interpret")
+    k = ops.fourier_deltaw(c, E, d1, d2, 300.0, backend="interpret")
     kerr = float(jnp.abs(k - fft_fn(c)).max())
     emit("kernels/pallas_interpret_allclose", 0.0, f"err={kerr:.2e}")
 
@@ -51,6 +114,8 @@ def main():
          f"flops_model={4*n*(d1+d2)*tokens:.2e}")
     emit("kernels/merged_apply_768_t512", us_merg,
          f"flops_model={4*n*d1*d2 + 2*d1*d2*tokens:.2e}")
+
+    bench_backends(d1, d2, n, tokens)
 
 
 if __name__ == "__main__":

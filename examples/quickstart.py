@@ -19,11 +19,16 @@ def main():
     cfg = configs.reduced(configs.get("yi-6b"), layers=4, width=128).replace(
         vocab=256)
 
-    # 2. attach the paper's technique: n spectral coefficients per q/v matrix
-    peft = PEFTConfig(method="fourierft", n=128, alpha=20.0, train_head=True)
+    # 2. attach the paper's technique: n spectral coefficients per q/v matrix.
+    #    kernel_backend picks how ΔW materializes (DESIGN §Kernels): "auto"
+    #    compiles the Pallas kernels on TPU and uses the einsum reference
+    #    elsewhere; explain_kernels() shows what each site resolved to.
+    peft = PEFTConfig(method="fourierft", n=128, alpha=20.0, train_head=True,
+                      kernel_backend="auto")
     model = build(cfg, peft)
     print(f"arch={cfg.name}  trainable params={model.trainable_params():,} "
           f"(vs {sum(x.size for x in jax.tree.leaves(model.init(jax.random.PRNGKey(0))['base'])):,} frozen)")
+    print(model.explain_kernels())
 
     # 3. train with the fault-tolerant loop (async checkpoints, anomaly guard)
     tcfg = TrainConfig(learning_rate=5e-2, total_steps=200, warmup_steps=10)

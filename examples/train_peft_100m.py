@@ -26,11 +26,17 @@ CFG_100M = ModelConfig(
 )
 
 
-def run(method: str, steps: int, pretrained_base, data):
-    peft = (PEFTConfig(method="fourierft", n=256, alpha=16.0)
+def run(method: str, steps: int, pretrained_base, data,
+        kernel_backend: str = "auto"):
+    peft = (PEFTConfig(method="fourierft", n=256, alpha=16.0,
+                       kernel_backend=kernel_backend)
             if method == "fourierft"
-            else PEFTConfig(method="lora", lora_r=8, lora_alpha=16.0))
+            else PEFTConfig(method="lora", lora_r=8, lora_alpha=16.0,
+                            kernel_backend=kernel_backend))
     model = build(CFG_100M, peft)
+    # which kernel backend each adapted site's ΔW path resolved to
+    # (compiled Pallas on TPU, einsum reference elsewhere — DESIGN §Kernels)
+    print(model.explain_kernels())
     tcfg = TrainConfig(learning_rate=3e-3 if method == "lora" else 1e-2,
                        total_steps=steps, warmup_steps=max(steps // 10, 2))
     state, frozen = train_step.init_state(model, tcfg, jax.random.PRNGKey(1))
@@ -54,6 +60,9 @@ def main():
     ap.add_argument("--pretrain-steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--kernel-backend", type=str, default="auto",
+                    choices=["auto", "pallas", "interpret", "einsum"],
+                    help="ΔW kernel policy (DESIGN §Kernels)")
     args = ap.parse_args()
 
     n_base = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
@@ -82,7 +91,8 @@ def main():
     results = {}
     for method in ["fourierft", "lora"]:
         print(f"\n== fine-tuning with {method} ==")
-        results[method] = run(method, args.steps, pretrained, ft_data)
+        results[method] = run(method, args.steps, pretrained, ft_data,
+                              kernel_backend=args.kernel_backend)
         r = results[method]
         print(f"  trainable={r['trainable']:,}  loss {r['first']:.3f} -> "
               f"{r['final']:.3f}  ({r['wall_s']:.0f}s, "

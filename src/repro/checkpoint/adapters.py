@@ -78,6 +78,19 @@ def export_adapter(directory: str, adapter_id: str, adapters: Dict,
 def _peft_from_manifest(d: Dict) -> PEFTConfig:
     d = dict(d)
     d["target_modules"] = tuple(d.get("target_modules", ("wq", "wv")))
+    # manifests written before the kernel registry carry the legacy
+    # `use_pallas` tri-state: migrate it onto kernel_backend silently here
+    # (the PEFTConfig constructor shim warns — appropriate for live code,
+    # noise for every import of an old export)
+    legacy = d.pop("use_pallas", None)
+    if legacy is not None and "kernel_backend" not in d:
+        mapped = {"auto": "auto", "never": "einsum",
+                  "interpret": "interpret"}.get(legacy)
+        if mapped is None:
+            raise ValueError(
+                f"adapter manifest carries unknown legacy use_pallas="
+                f"{legacy!r}; expected one of ('auto', 'never', 'interpret')")
+        d["kernel_backend"] = mapped
     return PEFTConfig(**d)
 
 

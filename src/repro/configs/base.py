@@ -6,6 +6,7 @@ Every assigned architecture gets one module in this package defining `CONFIG`.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Tuple
 
@@ -95,7 +96,11 @@ class PEFTConfig:
     bandwidth: float = 200.0
     basis: str = "fourier"        # fourier | random | orthogonal (Table 6)
     strategy: str = "merged"      # merged | factored (see DESIGN §2)
-    use_pallas: str = "auto"      # auto | never | interpret  (kernel path select)
+    # kernel-backend policy (DESIGN §Kernels): auto = compiled Pallas where a
+    # registered op supports the site, einsum elsewhere; interpret is the
+    # debug backend; einsum forces the reference path.
+    kernel_backend: str = "auto"  # auto | pallas | interpret | einsum
+    use_pallas: Optional[str] = None  # DEPRECATED -> kernel_backend (shim)
     # --- LoRA baseline ---
     lora_r: int = 8
     lora_alpha: float = 16.0
@@ -104,8 +109,33 @@ class PEFTConfig:
     train_head: bool = False
     param_dtype: str = "float32"  # adapters train in f32
 
+    def __post_init__(self):
+        if self.use_pallas is not None:
+            mapped = _USE_PALLAS_TO_BACKEND.get(self.use_pallas)
+            if mapped is None:
+                raise ValueError(
+                    f"legacy use_pallas={self.use_pallas!r}; one of "
+                    f"{sorted(_USE_PALLAS_TO_BACKEND)} (or use kernel_backend)")
+            warnings.warn(
+                "PEFTConfig.use_pallas is deprecated; it selected nothing "
+                "since the kernel registry landed — use kernel_backend="
+                f"{mapped!r} (DESIGN.md §Kernels)", DeprecationWarning,
+                stacklevel=3)
+            object.__setattr__(self, "kernel_backend", mapped)
+            object.__setattr__(self, "use_pallas", None)
+        if self.kernel_backend not in ("auto", "pallas", "interpret",
+                                       "einsum"):
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}; one of "
+                "('auto', 'pallas', 'interpret', 'einsum')")
+
     def replace(self, **kw) -> "PEFTConfig":
         return dataclasses.replace(self, **kw)
+
+
+# legacy tri-state -> registry backend policy
+_USE_PALLAS_TO_BACKEND = {"auto": "auto", "never": "einsum",
+                          "interpret": "interpret"}
 
 
 @dataclass(frozen=True)

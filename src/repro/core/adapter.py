@@ -10,6 +10,8 @@ Protocol (per adapted 2-D weight site, stacked over layers on axis 0):
 
     init_site(rng, site, peft)          -> adapter dict (trainable + frozen)
     trainable_leaves(peft)              -> names of the trainable leaves
+    kernel_ops()                        -> KernelOp implementations, keyed
+                                           (op, method, backend) — see below
     site_delta(adapter, site, peft)     -> dense ΔW (stack, d1, d2)
     factored_apply(x, tr, aux, d1, d2)  -> y-contribution without ΔW
     bank_apply(x, tr, aux, d1, d2)      -> row-batched factored_apply (serving
@@ -19,6 +21,17 @@ Protocol (per adapted 2-D weight site, stacked over layers on axis 0):
     count_trainable(site, peft)         -> |Θ| contribution (paper Table 1)
     shared_storage_numbers(sites, peft) -> frozen numbers a checkpoint must
                                            carry beyond Θ (e.g. 2n entries)
+
+Kernel dispatch (DESIGN.md §Kernels): `site_delta`, `factored_apply`, and
+`bank_apply` are implemented ONCE on the base class as registry lookups —
+a method contributes math by returning `KernelOp`s from `kernel_ops()`
+(an `einsum` reference per op it supports, plus optional `pallas` /
+`interpret` accelerated backends with capability constraints). The backend
+is chosen per call site by `peft.kernel_backend` + the op's `supports()`
+(platform, int32 phase bound, config predicates); `Model` snapshots the
+choices once at build as its `kernel_policy`. This is how the FourierFT/DCT
+Pallas ΔW kernels and the circulant FFT apply reach the train/serve/merge
+hot paths without any method-specific branching outside this file.
 
 Flags: `mergeable` (ΔW folds into W — the zamba2 shared block additionally
 keeps any method factored for structural reasons), `linear_delta` (the
@@ -33,6 +46,7 @@ gather the reserved zero row).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -43,6 +57,8 @@ import jax.numpy as jnp
 from repro.configs.base import PEFTConfig
 from repro.core import basis as basis_mod
 from repro.core import fourierft, lora
+from repro.kernels import api as kernel_api
+from repro.kernels.api import KernelOp
 
 
 @dataclass(frozen=True)
@@ -89,23 +105,56 @@ class AdapterMethod:
     def trainable_leaves(self, peft: PEFTConfig) -> Tuple[str, ...]:
         return ()
 
-    # ---- math -------------------------------------------------------------
+    def split_adapter(self, adapter: Dict,
+                      peft: PEFTConfig) -> Tuple[Dict, Dict]:
+        """-> (trainable, aux) views of one site's adapter dict."""
+        names = set(self.trainable_leaves(peft))
+        tr = {k: v for k, v in adapter.items() if k in names}
+        aux = {k: v for k, v in adapter.items() if k not in names}
+        return tr, aux
+
+    # ---- kernels ----------------------------------------------------------
+    def kernel_ops(self) -> Tuple[KernelOp, ...]:
+        """KernelOp implementations this method provides, collected lazily
+        into the kernel registry on first dispatch (kernels/api.py). Every op
+        the method serves needs at least an `einsum` reference; accelerated
+        backends (`pallas`/`interpret`) are optional and constraint-gated.
+        Implementations must be linear in the trainable leaves (bank
+        contract) and return float32."""
+        return ()
+
+    def _kernel(self, op: str, peft: PEFTConfig, d1: int,
+                d2: int) -> Optional[KernelOp]:
+        return kernel_api.resolve_op(op, self, peft, d1, d2, missing_ok=True)
+
+    # ---- math (registry-dispatched; see module docstring) ------------------
     def site_delta(self, adapter: Dict, site: AdapterSite, peft: PEFTConfig,
                    out_dtype=None) -> jax.Array:
-        raise NotImplementedError(f"{self.name} has no dense ΔW form")
+        op = self._kernel("deltaw", peft, site.d_in, site.d_out)
+        if op is None:
+            raise NotImplementedError(f"{self.name} has no dense ΔW form")
+        tr, aux = self.split_adapter(adapter, peft)
+        dw = op.fn(tr, aux, site.d_in, site.d_out, peft)
+        return dw.astype(out_dtype) if out_dtype is not None else dw
 
     def factored_apply(self, x: jax.Array, trainable: Dict, aux: Dict,
                        d1: int, d2: int, peft: PEFTConfig) -> jax.Array:
         """Additive output contribution for one layer slice, x (..., d1) ->
         (..., d2), in float32. Must equal x @ site_delta(...) exactly (up to
         float error) whenever `linear_delta`."""
-        raise NotImplementedError(self.name)
+        op = self._kernel("factored_apply", peft, d1, d2)
+        if op is None:
+            raise NotImplementedError(self.name)
+        return op.fn(x, trainable, aux, d1, d2, peft)
 
     def bank_apply(self, x: jax.Array, trainable: Dict, aux: Dict,
                    d1: int, d2: int, peft: PEFTConfig) -> jax.Array:
         """Row-batched factored apply: x (B, ..., d1); every trainable leaf
-        carries a leading (B,) per-request dim. Default: vmap the per-row
-        path — methods override with batched einsums where it matters."""
+        carries a leading (B,) per-request dim. Falls back to vmapping the
+        per-row path for methods that register no bank op."""
+        op = self._kernel("bank_apply", peft, d1, d2)
+        if op is not None:
+            return op.fn(x, trainable, aux, d1, d2, peft)
         return jax.vmap(
             lambda xr, tr: self.factored_apply(xr, tr, aux, d1, d2, peft)
         )(x, trainable)
@@ -166,6 +215,48 @@ def registered_methods(site_params_only: bool = False) -> Tuple[str, ...]:
 # with the Table-6 random/orthogonal basis ablation folded in via peft.basis.
 # ---------------------------------------------------------------------------
 
+def _fourier_basis_only(peft: PEFTConfig) -> bool:
+    return getattr(peft, "basis", "fourier") == "fourier"
+
+
+def _fourier_deltaw_einsum(tr, aux, d1, d2, peft):
+    if "entries" in aux:
+        return fourierft.materialize_delta(tr["c"], aux["entries"], d1, d2,
+                                           peft.alpha)
+    return basis_mod.materialize_delta_basis(tr["c"], aux["b1"], aux["b2"],
+                                             peft.basis, peft.alpha)
+
+
+def _fourier_deltaw_pallas(tr, aux, d1, d2, peft, *, interpret):
+    from repro.kernels import ops as kops
+    return kops.fourier_deltaw_harness(tr["c"], aux["entries"], d1, d2,
+                                       peft.alpha, interpret=interpret)
+
+
+def _fourier_factored_einsum(x, tr, aux, d1, d2, peft):
+    if "entries" in aux:
+        return fourierft.factored_apply(
+            x.astype(jnp.float32), tr["c"], aux["entries"], d1, d2,
+            peft.alpha)
+    scale = basis_mod.basis_scale(peft.basis, d1, d2, peft.alpha)
+    proj = (x.astype(jnp.float32) @ aux["b1"]) \
+        * tr["c"].astype(jnp.float32)
+    return proj @ aux["b2"].T * scale
+
+
+def _fourier_bank_einsum(x, tr, aux, d1, d2, peft):
+    xf = x.astype(jnp.float32)
+    c = _per_row(tr["c"].astype(jnp.float32), x.ndim)
+    if "entries" in aux:
+        cos_t, sin_t, cos_p, sin_p = fourierft.fourier_bases(
+            aux["entries"], d1, d2)
+        pc = (xf @ cos_t) * c
+        ps = (xf @ sin_t) * c
+        return (pc @ cos_p.T - ps @ sin_p.T) * (peft.alpha / (d1 * d2))
+    scale = basis_mod.basis_scale(peft.basis, d1, d2, peft.alpha)
+    return ((xf @ aux["b1"]) * c) @ aux["b2"].T * scale
+
+
 class FourierFT(AdapterMethod):
     name = "fourierft"
 
@@ -188,36 +279,27 @@ class FourierFT(AdapterMethod):
     def trainable_leaves(self, peft):
         return ("c",)
 
-    def site_delta(self, adapter, site, peft, out_dtype=None):
-        if peft.basis == "fourier":
-            return fourierft.materialize_delta(
-                adapter["c"], adapter["entries"], site.d_in, site.d_out,
-                peft.alpha, out_dtype=out_dtype)
-        return basis_mod.materialize_delta_basis(
-            adapter["c"], adapter["b1"], adapter["b2"], peft.basis,
-            peft.alpha, out_dtype=out_dtype)
-
-    def factored_apply(self, x, trainable, aux, d1, d2, peft):
-        if "entries" in aux:
-            return fourierft.factored_apply(
-                x.astype(jnp.float32), trainable["c"], aux["entries"],
-                d1, d2, peft.alpha)
-        scale = basis_mod.basis_scale(peft.basis, d1, d2, peft.alpha)
-        proj = (x.astype(jnp.float32) @ aux["b1"]) \
-            * trainable["c"].astype(jnp.float32)
-        return proj @ aux["b2"].T * scale
-
-    def bank_apply(self, x, trainable, aux, d1, d2, peft):
-        xf = x.astype(jnp.float32)
-        c = _per_row(trainable["c"].astype(jnp.float32), x.ndim)
-        if "entries" in aux:
-            cos_t, sin_t, cos_p, sin_p = fourierft.fourier_bases(
-                aux["entries"], d1, d2)
-            pc = (xf @ cos_t) * c
-            ps = (xf @ sin_t) * c
-            return (pc @ cos_p.T - ps @ sin_p.T) * (peft.alpha / (d1 * d2))
-        scale = basis_mod.basis_scale(peft.basis, d1, d2, peft.alpha)
-        return ((xf @ aux["b1"]) * c) @ aux["b2"].T * scale
+    def kernel_ops(self):
+        from repro.kernels import ops as kops
+        return (
+            KernelOp("deltaw", self.name, "einsum", _fourier_deltaw_einsum),
+            KernelOp("deltaw", self.name, "pallas",
+                     functools.partial(_fourier_deltaw_pallas,
+                                       interpret=False),
+                     platforms=("tpu",),
+                     max_dim=kops.FOURIER_INT32_SAFE_DIM,
+                     requires=_fourier_basis_only,
+                     note="integer-phase MXU tiles (fourier_deltaw.py)"),
+            KernelOp("deltaw", self.name, "interpret",
+                     functools.partial(_fourier_deltaw_pallas,
+                                       interpret=True),
+                     max_dim=kops.FOURIER_INT32_SAFE_DIM,
+                     requires=_fourier_basis_only),
+            KernelOp("factored_apply", self.name, "einsum",
+                     _fourier_factored_einsum),
+            KernelOp("bank_apply", self.name, "einsum",
+                     _fourier_bank_einsum),
+        )
 
     def count_trainable(self, site, peft):
         return peft.n * site.stack
@@ -246,6 +328,34 @@ def _dct_bases(entries: jax.Array, d1: int, d2: int):
     return c1, c2                                              # (d1,n) (d2,n)
 
 
+def _dct_deltaw_einsum(tr, aux, d1, d2, peft):
+    c1, c2 = _dct_bases(aux["entries"], d1, d2)
+    c = tr["c"].astype(jnp.float32)
+    if c.ndim == 1:
+        dw = (c1 * c) @ c2.T
+    else:
+        dw = jnp.einsum("ln,dn,en->lde", c, c1, c2)
+    return dw * (peft.alpha / (d1 * d2))
+
+
+def _dct_deltaw_pallas(tr, aux, d1, d2, peft, *, interpret):
+    from repro.kernels import ops as kops
+    return kops.dct_deltaw_harness(tr["c"], aux["entries"], d1, d2,
+                                   peft.alpha, interpret=interpret)
+
+
+def _dct_factored_einsum(x, tr, aux, d1, d2, peft):
+    c1, c2 = _dct_bases(aux["entries"], d1, d2)
+    proj = (x.astype(jnp.float32) @ c1) * tr["c"].astype(jnp.float32)
+    return proj @ c2.T * (peft.alpha / (d1 * d2))
+
+
+def _dct_bank_einsum(x, tr, aux, d1, d2, peft):
+    c1, c2 = _dct_bases(aux["entries"], d1, d2)
+    c = _per_row(tr["c"].astype(jnp.float32), x.ndim)
+    return ((x.astype(jnp.float32) @ c1) * c) @ c2.T * (peft.alpha / (d1 * d2))
+
+
 class DCTAdapter(AdapterMethod):
     name = "dct"
 
@@ -260,28 +370,21 @@ class DCTAdapter(AdapterMethod):
     def trainable_leaves(self, peft):
         return ("c",)
 
-    def site_delta(self, adapter, site, peft, out_dtype=None):
-        d1, d2 = site.d_in, site.d_out
-        c1, c2 = _dct_bases(adapter["entries"], d1, d2)
-        c = adapter["c"].astype(jnp.float32)
-        if c.ndim == 1:
-            dw = (c1 * c) @ c2.T
-        else:
-            dw = jnp.einsum("ln,dn,en->lde", c, c1, c2)
-        dw = dw * (peft.alpha / (d1 * d2))
-        return dw.astype(out_dtype) if out_dtype is not None else dw
-
-    def factored_apply(self, x, trainable, aux, d1, d2, peft):
-        c1, c2 = _dct_bases(aux["entries"], d1, d2)
-        proj = (x.astype(jnp.float32) @ c1) \
-            * trainable["c"].astype(jnp.float32)
-        return proj @ c2.T * (peft.alpha / (d1 * d2))
-
-    def bank_apply(self, x, trainable, aux, d1, d2, peft):
-        c1, c2 = _dct_bases(aux["entries"], d1, d2)
-        c = _per_row(trainable["c"].astype(jnp.float32), x.ndim)
-        return ((x.astype(jnp.float32) @ c1) * c) @ c2.T \
-            * (peft.alpha / (d1 * d2))
+    def kernel_ops(self):
+        from repro.kernels import ops as kops
+        return (
+            KernelOp("deltaw", self.name, "einsum", _dct_deltaw_einsum),
+            KernelOp("deltaw", self.name, "pallas",
+                     functools.partial(_dct_deltaw_pallas, interpret=False),
+                     platforms=("tpu",), max_dim=kops.DCT_INT32_SAFE_DIM,
+                     note="cosine-only integer-phase tiles (dct_deltaw.py)"),
+            KernelOp("deltaw", self.name, "interpret",
+                     functools.partial(_dct_deltaw_pallas, interpret=True),
+                     max_dim=kops.DCT_INT32_SAFE_DIM),
+            KernelOp("factored_apply", self.name, "einsum",
+                     _dct_factored_einsum),
+            KernelOp("bank_apply", self.name, "einsum", _dct_bank_einsum),
+        )
 
     def count_trainable(self, site, peft):
         return peft.n * site.stack
@@ -294,18 +397,51 @@ class DCTAdapter(AdapterMethod):
 # ---------------------------------------------------------------------------
 # Circulant (arXiv:2505.00580 family): one kernel g per layer, ΔW[j,k] =
 # α/(d1·d2) · g[(k−j) mod M], M = max(d1,d2). max(d1,d2) trainables per site
-# per layer; the factored path materializes the (d1,d2) gather — fine at
-# adapter scale, an FFT-circulant Pallas path is future work.
+# per layer. The accelerated apply path is an FFT circular convolution
+# (kernels/ops.py circulant_apply_fft, O(M log M) per token) — an XLA FFT
+# rather than a hand-written Pallas kernel, registered under the accelerated
+# backends; the einsum reference materializes the (d1,d2) gather.
 # ---------------------------------------------------------------------------
+
+def _circulant_idx(d1: int, d2: int) -> jnp.ndarray:
+    m = max(d1, d2)
+    idx = (np.arange(d2)[None, :] - np.arange(d1)[:, None]) % m
+    return jnp.asarray(idx, jnp.int32)
+
+
+def _circ_deltaw_einsum(tr, aux, d1, d2, peft):
+    g = tr["kernel"].astype(jnp.float32)
+    return jnp.take(g, _circulant_idx(d1, d2), axis=-1) \
+        * (peft.alpha / (d1 * d2))
+
+
+def _circ_factored_einsum(x, tr, aux, d1, d2, peft):
+    g = tr["kernel"].astype(jnp.float32)
+    dw = jnp.take(g, _circulant_idx(d1, d2), axis=-1) \
+        * (peft.alpha / (d1 * d2))
+    return x.astype(jnp.float32) @ dw
+
+
+def _circ_bank_einsum(x, tr, aux, d1, d2, peft):
+    g = tr["kernel"].astype(jnp.float32)                 # (B, M)
+    dw = jnp.take(g, _circulant_idx(d1, d2), axis=-1) \
+        * (peft.alpha / (d1 * d2))
+    return jnp.einsum("b...d,bdf->b...f", x.astype(jnp.float32), dw)
+
+
+def _circ_factored_fft(x, tr, aux, d1, d2, peft):
+    from repro.kernels import ops as kops
+    return kops.circulant_apply_fft(x, tr["kernel"], d1, d2, peft.alpha)
+
+
+def _circ_bank_fft(x, tr, aux, d1, d2, peft):
+    from repro.kernels import ops as kops
+    return kops.circulant_apply_fft(x, _per_row(tr["kernel"], x.ndim),
+                                    d1, d2, peft.alpha)
+
 
 class CirculantAdapter(AdapterMethod):
     name = "circulant"
-
-    @staticmethod
-    def _idx(d1: int, d2: int) -> jnp.ndarray:
-        m = max(d1, d2)
-        idx = (np.arange(d2)[None, :] - np.arange(d1)[:, None]) % m
-        return jnp.asarray(idx, jnp.int32)
 
     def init_site(self, rng, site, peft):
         del rng  # zero-init: fine-tuning starts at the base model (cf. LoRA B)
@@ -316,21 +452,28 @@ class CirculantAdapter(AdapterMethod):
     def trainable_leaves(self, peft):
         return ("kernel",)
 
-    def site_delta(self, adapter, site, peft, out_dtype=None):
-        d1, d2 = site.d_in, site.d_out
-        g = adapter["kernel"].astype(jnp.float32)
-        dw = jnp.take(g, self._idx(d1, d2), axis=-1) * (peft.alpha / (d1 * d2))
-        return dw.astype(out_dtype) if out_dtype is not None else dw
-
-    def factored_apply(self, x, trainable, aux, d1, d2, peft):
-        g = trainable["kernel"].astype(jnp.float32)
-        dw = jnp.take(g, self._idx(d1, d2), axis=-1) * (peft.alpha / (d1 * d2))
-        return x.astype(jnp.float32) @ dw
-
-    def bank_apply(self, x, trainable, aux, d1, d2, peft):
-        g = trainable["kernel"].astype(jnp.float32)          # (B, M)
-        dw = jnp.take(g, self._idx(d1, d2), axis=-1) * (peft.alpha / (d1 * d2))
-        return jnp.einsum("b...d,bdf->b...f", x.astype(jnp.float32), dw)
+    def kernel_ops(self):
+        # the FFT apply is plain XLA and runs anywhere, but at adapter dims
+        # its CPU win over the einsum gather is inside measurement noise —
+        # keep the default `auto` chain on the documented semantics
+        # (accelerated on TPU, reference elsewhere) by TPU-gating the pallas
+        # key; the interpret key stays platform-free so CI cross-checks the
+        # FFT math everywhere and CPU users can opt in explicitly.
+        fft_note = "XLA rfft circular convolution (not a Pallas kernel)"
+        return (
+            KernelOp("deltaw", self.name, "einsum", _circ_deltaw_einsum),
+            KernelOp("factored_apply", self.name, "einsum",
+                     _circ_factored_einsum),
+            KernelOp("factored_apply", self.name, "pallas",
+                     _circ_factored_fft, platforms=("tpu",), note=fft_note),
+            KernelOp("factored_apply", self.name, "interpret",
+                     _circ_factored_fft, note=fft_note),
+            KernelOp("bank_apply", self.name, "einsum", _circ_bank_einsum),
+            KernelOp("bank_apply", self.name, "pallas", _circ_bank_fft,
+                     platforms=("tpu",), note=fft_note),
+            KernelOp("bank_apply", self.name, "interpret", _circ_bank_fft,
+                     note=fft_note),
+        )
 
     def count_trainable(self, site, peft):
         return max(site.d_in, site.d_out) * site.stack
@@ -339,6 +482,27 @@ class CirculantAdapter(AdapterMethod):
 # ---------------------------------------------------------------------------
 # LoRA baseline
 # ---------------------------------------------------------------------------
+
+def _lora_deltaw_einsum(tr, aux, d1, d2, peft):
+    return lora.lora_delta(tr["lora_a"], tr["lora_b"], peft.lora_alpha,
+                           peft.lora_r)
+
+
+def _lora_factored_einsum(x, tr, aux, d1, d2, peft):
+    xf = x.astype(jnp.float32)
+    y = (xf @ tr["lora_a"].astype(jnp.float32)) \
+        @ tr["lora_b"].astype(jnp.float32)
+    return y * (peft.lora_alpha / peft.lora_r)
+
+
+def _lora_bank_einsum(x, tr, aux, d1, d2, peft):
+    xf = x.astype(jnp.float32)
+    p = jnp.einsum("b...d,bdr->b...r", xf,
+                   tr["lora_a"].astype(jnp.float32))
+    y = jnp.einsum("b...r,brf->b...f", p,
+                   tr["lora_b"].astype(jnp.float32))
+    return y * (peft.lora_alpha / peft.lora_r)
+
 
 class LoRA(AdapterMethod):
     name = "lora"
@@ -351,24 +515,13 @@ class LoRA(AdapterMethod):
     def trainable_leaves(self, peft):
         return ("lora_a", "lora_b")
 
-    def site_delta(self, adapter, site, peft, out_dtype=None):
-        return lora.lora_delta(adapter["lora_a"], adapter["lora_b"],
-                               peft.lora_alpha, peft.lora_r,
-                               out_dtype=out_dtype)
-
-    def factored_apply(self, x, trainable, aux, d1, d2, peft):
-        xf = x.astype(jnp.float32)
-        y = (xf @ trainable["lora_a"].astype(jnp.float32)) \
-            @ trainable["lora_b"].astype(jnp.float32)
-        return y * (peft.lora_alpha / peft.lora_r)
-
-    def bank_apply(self, x, trainable, aux, d1, d2, peft):
-        xf = x.astype(jnp.float32)
-        p = jnp.einsum("b...d,bdr->b...r", xf,
-                       trainable["lora_a"].astype(jnp.float32))
-        y = jnp.einsum("b...r,brf->b...f", p,
-                       trainable["lora_b"].astype(jnp.float32))
-        return y * (peft.lora_alpha / peft.lora_r)
+    def kernel_ops(self):
+        return (
+            KernelOp("deltaw", self.name, "einsum", _lora_deltaw_einsum),
+            KernelOp("factored_apply", self.name, "einsum",
+                     _lora_factored_einsum),
+            KernelOp("bank_apply", self.name, "einsum", _lora_bank_einsum),
+        )
 
     def count_trainable(self, site, peft):
         return peft.lora_r * (site.d_in + site.d_out) * site.stack
@@ -376,8 +529,19 @@ class LoRA(AdapterMethod):
 
 # ---------------------------------------------------------------------------
 # BitFit baseline — a bias shift, not a weight delta (linear_delta=False);
-# merging adds to (or creates) the site's `__b` bias leaf.
+# merging adds to (or creates) the site's `__b` bias leaf. No deltaw op, so
+# site_delta raises through the base class's registry miss.
 # ---------------------------------------------------------------------------
+
+def _bitfit_factored_einsum(x, tr, aux, d1, d2, peft):
+    b = tr["delta_b"].astype(jnp.float32)
+    return jnp.broadcast_to(b, x.shape[:-1] + (d2,))
+
+
+def _bitfit_bank_einsum(x, tr, aux, d1, d2, peft):
+    b = tr["delta_b"].astype(jnp.float32)                # (B, d2)
+    return jnp.broadcast_to(_per_row(b, x.ndim), x.shape[:-1] + (d2,))
+
 
 class BitFit(AdapterMethod):
     name = "bitfit"
@@ -391,13 +555,12 @@ class BitFit(AdapterMethod):
     def trainable_leaves(self, peft):
         return ("delta_b",)
 
-    def factored_apply(self, x, trainable, aux, d1, d2, peft):
-        b = trainable["delta_b"].astype(jnp.float32)
-        return jnp.broadcast_to(b, x.shape[:-1] + (d2,))
-
-    def bank_apply(self, x, trainable, aux, d1, d2, peft):
-        b = trainable["delta_b"].astype(jnp.float32)         # (B, d2)
-        return jnp.broadcast_to(_per_row(b, x.ndim), x.shape[:-1] + (d2,))
+    def kernel_ops(self):
+        return (
+            KernelOp("factored_apply", self.name, "einsum",
+                     _bitfit_factored_einsum),
+            KernelOp("bank_apply", self.name, "einsum", _bitfit_bank_einsum),
+        )
 
     def merge_site(self, eff, key, adapter, site, peft, constrain=None,
                    path=None):

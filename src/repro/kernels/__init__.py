@@ -1,5 +1,11 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: FourierFT ΔW
-materialization and its backward projection. `ops.fourier_deltaw` is the
-public entry; `ref` holds the literal-paper (ifft2) oracles."""
-from repro.kernels import fourier_deltaw, ops, ref
+"""Pluggable kernel backends for the adapter hot-spot ops (DESIGN.md
+§Kernels): the (op, method, backend)-keyed registry + `KernelPolicy` live in
+`api`; Pallas TPU kernels for FourierFT and DCT ΔW in `fourier_deltaw` /
+`dct_deltaw`; the shared custom-VJP harness, circulant FFT apply, and the
+standalone `fourier_deltaw` entry in `ops`; literal-paper oracles in `ref`."""
+from repro.kernels import api, dct_deltaw, fourier_deltaw, ops, ref
+from repro.kernels.api import (
+    KernelOp, KernelPolicy, KernelUnavailableError, lookup,
+    register_kernel_op, resolve_op,
+)
 from repro.kernels.ops import fourier_deltaw as _  # noqa: F401 (re-export check)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernels for the DCT (LoCA-style, arXiv:2502.06820) ΔW and its
+VJP — the cosine-only sibling of fourier_deltaw.py, reusing its integer
+phase-block trick with half-integer row phases:
+
+    ΔW[j,k] = α/(d1·d2) · Σ_l c_l · cos(π(2j+1)u_l/2d1) · cos(π(2k+1)v_l/2d2)
+            = (C1 ⊙ c) @ C2ᵀ          (one MXU matmul per tile — no sin term)
+
+Phase precision: cos(π(2j+1)u/2d) has period 4d in the integer product
+(2j+1)·u, which is reduced exactly in int32 — (2j+1)·u < 2³¹ holds for every
+row of the block-padded grid when d ≤ ops.DCT_INT32_SAFE_DIM (≈32.5k; the
+bound includes the up-to-(bm−1)-row padding, unlike a naive d² estimate).
+Vocab-sized grids route to the einsum reference via the op's `max_dim`.
+
+Backward (`dc`): same tiling over the cotangent g; per tile
+    dc += Σ_k (gᵀ C1)[k,:] ⊙ C2[k,:]
+accumulated into one (n,) block across sequential grid steps.
+
+VMEM at (bm, bn, n) = (256, 256, 1024): basis blocks 2·256·1024·4B = 2 MB +
+0.25 MB tile accumulator — half the FourierFT kernel's footprint (no sin
+blocks), comfortably double-bufferable in 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PI = 3.141592653589793
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+
+
+def _cos_block(idx0: jax.Array, size: int, dim: int, uv: jax.Array,
+               c: jax.Array | None):
+    """Half-integer-phase cosine block for rows [idx0, idx0+size) of a
+    `dim`-point DCT axis: cos(π(2j+1)u/2d), optionally pre-scaled by c."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (size, 1), 0) + idx0
+    prod = (2 * rows + 1) * uv[None, :].astype(jnp.int32)   # exact in int32
+    prod = jax.lax.rem(prod, jnp.int32(4 * dim))            # cos period: 4d
+    cos = jnp.cos(prod.astype(jnp.float32) * (PI / (2.0 * dim)))
+    if c is not None:
+        cos = cos * c[None, :]
+    return cos
+
+
+def _deltaw_kernel(c_ref, u_ref, v_ref, o_ref, *, d1, d2, alpha, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    cb = _cos_block(i * bm, bm, d1, u_ref[...], c_ref[...])
+    rb = _cos_block(j * bn, bn, d2, v_ref[...], None)
+    acc = jax.lax.dot_general(cb, rb, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = acc * (alpha / (d1 * d2))
+
+
+def deltaw_pallas(c: jax.Array, u: jax.Array, v: jax.Array, d1: int, d2: int,
+                  alpha: float, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                  interpret: bool = False) -> jax.Array:
+    """c (n,) f32, u/v (n,) i32 (n padded to 128 | c zero-padded).
+    Returns ΔW (d1p, d2p) f32 with d1p/d2p the block-padded dims."""
+    n = c.shape[0]
+    d1p = -(-d1 // bm) * bm
+    d2p = -(-d2 // bn) * bn
+    grid = (d1p // bm, d2p // bn)
+    kernel = functools.partial(_deltaw_kernel, d1=d1, d2=d2, alpha=alpha,
+                               bm=bm, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d1p, d2p), jnp.float32),
+        interpret=interpret,
+    )(c, u, v)
+
+
+def _dc_kernel(g_ref, u_ref, v_ref, o_ref, *, d1, d2, alpha, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)                    # (bm, bn)
+    cb = _cos_block(i * bm, bm, d1, u_ref[...], None)
+    rb = _cos_block(j * bn, bn, d2, v_ref[...], None)
+    a = jax.lax.dot_general(g, cb, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (bn, n)
+    o_ref[...] += jnp.sum(a * rb, axis=0) * (alpha / (d1 * d2))
+
+
+def dc_pallas(g: jax.Array, u: jax.Array, v: jax.Array, d1: int, d2: int,
+              alpha: float, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+              interpret: bool = False) -> jax.Array:
+    """g (d1p, d2p) f32 cotangent (zero-padded outside (d1, d2)) -> dc (n,)."""
+    n = u.shape[0]
+    d1p, d2p = g.shape
+    grid = (d1p // bm, d2p // bn)
+    kernel = functools.partial(_dc_kernel, d1=d1, d2=d2, alpha=alpha,
+                               bm=bm, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(g, u, v)

@@ -8,9 +8,11 @@ and accumulates two MXU matmuls:
     tile = (cosθ ⊙ c) @ cosφᵀ − (sinθ ⊙ c) @ sinφᵀ,  scaled by α/(d1·d2)
 
 Phase precision: angles are reduced exactly in int32 — (j·u) mod d1 is exact
-for d1,d2 < 46341 (j·u < 2³¹), so cos/sin see arguments in [0, 2π) with full
-f32 precision even for 8k×30k weights. ops.py falls back to the einsum path
-for larger dims (vocab-sized grids; not a default adaptation target).
+while j·u < 2³¹, i.e. for dims ≤ ops.FOURIER_INT32_SAFE_DIM (46336; j runs
+over the block-padded rows, hence slightly under ⌊√2³¹⌋) — so cos/sin see
+arguments in [0, 2π) with full f32 precision even for 8k×30k weights. The
+registry's capability model (api.py `max_dim`) routes larger dims (vocab-sized
+grids; not a default adaptation target) to the einsum path.
 
 Backward (`dc`): same tiling over the incoming cotangent g; per tile
     dc += Σ_k cosφ[k,:] ⊙ (gᵀ cosθ)[k,:] − sinφ ⊙ (gᵀ sinθ)

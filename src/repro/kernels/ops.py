@@ -1,10 +1,21 @@
-"""Jitted public wrappers for the FourierFT kernels.
+"""Differentiable harnesses around the Pallas spectral kernels, plus the
+non-Pallas accelerated paths, consumed by the kernel registry (api.py).
 
-`fourier_deltaw(c, entries, d1, d2, alpha)` — differentiable (custom VJP wired
-to the `dc` kernel), handles n/dim padding, vmaps over stacked layers, and
-falls back to the einsum path when the Pallas path is unavailable (CPU
-backend without interpret) or the int32 phase reduction would overflow
-(dims ≥ 46341, i.e. vocab-sized grids).
+`make_deltaw_harness(fwd, bwd, bm, bn)` packages the custom-VJP + padding
+plumbing once — n padded to the 128-lane boundary (entries padded directly;
+padded columns carry c = 0 so they contribute nothing), output sliced back to
+(d1, d2), cotangents zero-padded to the backward kernel's block grid, stacked
+(L, n) coefficients vmapped — and is instantiated for both the FourierFT
+kernels (fourier_deltaw.py) and the DCT kernels (dct_deltaw.py).
+
+`circulant_apply_fft` is the circulant adapter's fast apply: x @ C is a
+circular convolution, computed as irfft(rfft(x) ⊛ rfft(g)) in O(M log M)
+instead of materializing the (d1, d2) gather — an XLA FFT, not a hand-written
+Pallas kernel, registered under the accelerated backends by the method
+(core/adapter.py).
+
+`fourier_deltaw` remains the standalone entry for benchmarks/tests; it
+dispatches through the registry like the adapter stack does.
 """
 from __future__ import annotations
 
@@ -13,68 +24,121 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import fourierft as _f
-from repro.kernels import fourier_deltaw as _k
+from repro.kernels import dct_deltaw as _dk
+from repro.kernels import fourier_deltaw as _fk
 
-_INT32_SAFE_DIM = 46340  # max dim with exact (j*u) in int32
+# Largest dim whose integer phase product stays exact in int32 INCLUDING the
+# kernels' row padding to the bm=256 block grid (j runs over padded rows):
+#   fourier: j·u       with j ≤ d1p−1, u ≤ d1−1  → d ≤ 46336 (= 181·256)
+#   dct:     (2j+1)·u  reduced mod 4d            → d ≤ 32500
+# (The pre-registry code used 46340 = ⌊√2³¹⌋, which overflows for
+# d ∈ [46337, 46340] once block padding pushes j past d — tightened here.)
+FOURIER_INT32_SAFE_DIM = 46336
+DCT_INT32_SAFE_DIM = 32500
 
 
-def _pad_n(c, entries):
-    n = c.shape[-1]
+def _pad_entries(entries: jax.Array) -> jax.Array:
+    """Pad (2, n) int32 entries to the 128-lane boundary (zero entries)."""
+    n = entries.shape[1]
     npad = -(-n // 128) * 128
     if npad == n:
-        return c, entries
-    pc = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, npad - n)])
-    pe = jnp.pad(entries, ((0, 0), (0, npad - n)))
-    return pc, pe
+        return entries
+    return jnp.pad(entries, ((0, 0), (0, npad - n)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _deltaw(c, entries, d1, d2, alpha, interpret):
-    return _deltaw_fwd(c, entries, d1, d2, alpha, interpret)[0]
+def _pad_c(c: jax.Array, npad: int) -> jax.Array:
+    """Zero-pad (n,) coefficients to npad — padded basis columns are then
+    scaled by 0 and drop out of the tile matmuls exactly."""
+    n = c.shape[-1]
+    if npad == n:
+        return c
+    return jnp.pad(c, (0, npad - n))
 
 
-def _deltaw_fwd(c, entries, d1, d2, alpha, interpret):
-    cp, ep = _pad_n(c, entries)
-    out = _k.deltaw_pallas(cp, ep[0], ep[1], d1, d2, alpha,
-                           interpret=interpret)
-    return out[:d1, :d2], (entries,)
+def make_deltaw_harness(fwd_kernel, bwd_kernel, bm: int, bn: int):
+    """Reusable custom-VJP + padding wrapper for (c, entries) -> ΔW spectral
+    kernels.
+
+    fwd_kernel(c, u, v, d1, d2, alpha, interpret=) -> (d1p, d2p) tile-padded
+    ΔW; bwd_kernel(g, u, v, d1, d2, alpha, interpret=) -> (npad,) dc. The
+    returned callable is `h(c, entries, d1, d2, alpha, *, interpret=False)`
+    accepting c as (n,) or stacked (L, n)."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+    def _deltaw(c, entries, d1, d2, alpha, interpret):
+        return _fwd(c, entries, d1, d2, alpha, interpret)[0]
+
+    def _fwd(c, entries, d1, d2, alpha, interpret):
+        ep = _pad_entries(entries)
+        cp = _pad_c(c, ep.shape[1])
+        out = fwd_kernel(cp, ep[0], ep[1], d1, d2, alpha, interpret=interpret)
+        return out[:d1, :d2], (entries,)
+
+    def _bwd(d1, d2, alpha, interpret, res, g):
+        (entries,) = res
+        n = entries.shape[1]
+        ep = _pad_entries(entries)
+        d1p, d2p = -(-d1 // bm) * bm, -(-d2 // bn) * bn
+        gp = jnp.pad(g.astype(jnp.float32), ((0, d1p - d1), (0, d2p - d2)))
+        dc = bwd_kernel(gp, ep[0], ep[1], d1, d2, alpha, interpret=interpret)
+        return (dc[:n], None)
+
+    _deltaw.defvjp(_fwd, _bwd)
+
+    def harness(c: jax.Array, entries: jax.Array, d1: int, d2: int,
+                alpha: float, *, interpret: bool = False) -> jax.Array:
+        fn = lambda cc: _deltaw(cc.astype(jnp.float32), entries, d1, d2,
+                                alpha, interpret)
+        return jax.vmap(fn)(c) if c.ndim == 2 else fn(c)
+
+    return harness
 
 
-def _deltaw_bwd(d1, d2, alpha, interpret, res, g):
-    (entries,) = res
-    n = entries.shape[1]
-    _, ep = _pad_n(jnp.zeros((n,), jnp.float32), entries)
-    bm, bn = _k.DEFAULT_BM, _k.DEFAULT_BN
-    d1p, d2p = -(-d1 // bm) * bm, -(-d2 // bn) * bn
-    gp = jnp.pad(g.astype(jnp.float32), ((0, d1p - d1), (0, d2p - d2)))
-    dc = _k.dc_pallas(gp, ep[0], ep[1], d1, d2, alpha, interpret=interpret)
-    return (dc[:n], None)
+fourier_deltaw_harness = make_deltaw_harness(
+    _fk.deltaw_pallas, _fk.dc_pallas, _fk.DEFAULT_BM, _fk.DEFAULT_BN)
+dct_deltaw_harness = make_deltaw_harness(
+    _dk.deltaw_pallas, _dk.dc_pallas, _dk.DEFAULT_BM, _dk.DEFAULT_BN)
 
 
-_deltaw.defvjp(_deltaw_fwd, _deltaw_bwd)
+# ---------------------------------------------------------------------------
+# Circulant fast apply
+# ---------------------------------------------------------------------------
+
+def circulant_apply_fft(x: jax.Array, kernel: jax.Array, d1: int, d2: int,
+                        alpha: float) -> jax.Array:
+    """y = x @ ΔW for ΔW[j,k] = α/(d1·d2)·g[(k−j) mod M], M = max(d1, d2),
+    without materializing ΔW: zero-pad x to M, circularly convolve with g via
+    rfft/irfft (O(M log M) per token vs O(d1·d2)), truncate to d2 columns.
+
+    x (..., d1); kernel (..., M) broadcast-aligned against x's batch dims
+    ((M,) per layer on the factored path, (B, 1, M) per-row on the bank
+    path). Exactly zero for a zero kernel (zero spectrum ⊛ anything = 0),
+    preserving the adapter bank's reserved-zero-row contract."""
+    m = kernel.shape[-1]
+    xf = x.astype(jnp.float32)
+    if m != d1:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, m - d1)])
+    spec = jnp.fft.rfft(xf, axis=-1) \
+        * jnp.fft.rfft(kernel.astype(jnp.float32), axis=-1)
+    y = jnp.fft.irfft(spec, n=m, axis=-1)[..., :d2]
+    return y * (alpha / (d1 * d2))
 
 
-def _use_pallas(d1: int, d2: int, mode: str) -> tuple[bool, bool]:
-    """-> (use_kernel, interpret)."""
-    if mode == "never" or max(d1, d2) > _INT32_SAFE_DIM:
-        return False, False
-    if mode == "interpret":
-        return True, True
-    # auto: compiled Pallas on TPU, einsum elsewhere
-    on_tpu = jax.default_backend() == "tpu"
-    return (True, False) if on_tpu else (False, False)
-
+# ---------------------------------------------------------------------------
+# Standalone FourierFT entry (benchmarks / tests) — registry-dispatched
+# ---------------------------------------------------------------------------
 
 def fourier_deltaw(c: jax.Array, entries: jax.Array, d1: int, d2: int,
-                   alpha: float, *, use_pallas: str = "auto",
+                   alpha: float, *, backend: str = "auto",
                    out_dtype=None) -> jax.Array:
-    """ΔW for c (n,) -> (d1, d2), or stacked c (L, n) -> (L, d1, d2)."""
-    use, interpret = _use_pallas(d1, d2, use_pallas)
-    if not use:
-        return _f.materialize_delta(c, entries, d1, d2, alpha,
-                                    out_dtype=out_dtype)
-    fn = lambda cc: _deltaw(cc.astype(jnp.float32), entries, d1, d2, alpha,
-                            interpret)
-    out = jax.vmap(fn)(c) if c.ndim == 2 else fn(c)
+    """ΔW for c (n,) -> (d1, d2), or stacked c (L, n) -> (L, d1, d2).
+
+    `backend`: auto | pallas | interpret | einsum — resolved through the
+    kernel registry exactly like `AdapterMethod.site_delta` (api.resolve_op),
+    including the int32-bound einsum fallback for vocab-sized grids."""
+    from repro.configs.base import PEFTConfig
+    from repro.kernels import api
+    peft = PEFTConfig(method="fourierft", alpha=alpha, kernel_backend=backend)
+    op = api.resolve_op("deltaw", "fourierft", peft, d1, d2)
+    out = op.fn({"c": c}, {"entries": entries}, d1, d2, peft)
     return out.astype(out_dtype) if out_dtype is not None else out

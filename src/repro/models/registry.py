@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig
 from repro.core import adapter as adapter_api
 from repro.core import peft as peft_mod
 from repro.core.peft import AdapterSite
+from repro.kernels import api as kernel_api
 from repro.models import mamba2, ssm_lm, transformer, zamba2
 
 
@@ -100,6 +101,11 @@ class Model:
             # resolve per-arch default targets if user kept the generic default
             self.peft = resolve_default_targets(self.peft, self.cfg)
         self.sites = adapter_sites(self.cfg)
+        # kernel-backend choice per targeted (site, op), resolved ONCE here
+        # (DESIGN.md §Kernels) — an unknown kernel_backend fails at build,
+        # and explain_kernels() reports what each hot path will run
+        self.kernel_policy = kernel_api.KernelPolicy.build(
+            self.method, self.sites, self.peft)
 
     def _bank_kwargs(self, params: Dict) -> Dict:
         if self.bank_profiles is None:
@@ -242,6 +248,12 @@ class Model:
         return jax.eval_shape(
             functools.partial(self.init_cache, shape.global_batch,
                               shape.seq_len))
+
+    # ---- kernels ------------------------------------------------------------
+    def explain_kernels(self) -> str:
+        """Which kernel backend each targeted (site, op) resolved to —
+        the build-time `KernelPolicy` snapshot rendered for humans."""
+        return self.kernel_policy.explain()
 
     # ---- accounting ---------------------------------------------------------
     def trainable_params(self) -> int:

@@ -6,7 +6,10 @@
   W + ΔW before the scan; `factored` threads per-layer adapter slices through
   the scan and applies the method's factored bypass inside each layer. All
   method math is behind the `AdapterMethod` protocol (core/adapter.py) — this
-  module never looks at `peft.method`.
+  module never looks at `peft.method` — and every ΔW materialization /
+  factored / bank apply the protocol performs dispatches through the kernel
+  registry (DESIGN.md §Kernels), so the merged hot path below runs the
+  Pallas deltaw kernels on TPU without this module knowing.
 - serving adapter bank: per-request resident adapters are gathered ONCE per
   call (outside the layer scan) and applied per slot via `bank_apply` (see
   DESIGN.md §Adapter API).

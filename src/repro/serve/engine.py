@@ -47,7 +47,11 @@ def merge_for_serving(model: Model, params: Dict) -> Tuple[Model, Dict]:
     """Fold every mergeable layer-stack ΔW into the base. Leftover adapters
     (non-`layers/` sites such as the zamba2 shared block, or methods with
     `mergeable=False`) stay factored under their TRUE method — the rebuilt
-    model keeps the original PEFTConfig whenever anything is left over."""
+    model keeps the original PEFTConfig whenever anything is left over.
+
+    ΔW materialization runs through the method's `merge_site`, i.e. the
+    kernel registry (DESIGN.md §Kernels): on TPU the compiled Pallas deltaw
+    kernels do the folding; `model.explain_kernels()` reports the choice."""
     peft = model.peft
     method = model.method
     if not method.has_site_params or not params.get("peft"):
@@ -147,9 +151,11 @@ class AdapterBank:
 
     # config fields with no effect on the served math — everything NOT listed
     # here must match the group profile (fail closed: a future method knob is
-    # compared by default, not silently ignored)
-    _PROFILE_IRRELEVANT = ("strategy", "use_pallas", "train_head",
-                           "param_dtype")
+    # compared by default, not silently ignored). kernel_backend only selects
+    # which registered implementation computes identical math (DESIGN.md
+    # §Kernels); use_pallas is its deprecated alias (always None post-shim).
+    _PROFILE_IRRELEVANT = ("strategy", "kernel_backend", "use_pallas",
+                           "train_head", "param_dtype")
 
     def _profile_key(self, peft: PEFTConfig) -> tuple:
         d = dataclasses.asdict(peft)

@@ -92,6 +92,11 @@ def _loss_for(model: Model):
 
 
 def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    # ΔW materialization inside the step dispatches through the kernel
+    # registry (merge_site -> site_delta -> KernelOp, DESIGN.md §Kernels);
+    # fail fast here — before any tracing — if the model's build-time policy
+    # left a (site, op) pair without a usable backend.
+    model.kernel_policy.validate()
     loss_f = _loss_for(model)
 
     def grads_of(trainable, frozen, batch):

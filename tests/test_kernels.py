@@ -1,5 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps against the ref.py pure-jnp
-(ifft2) oracle in interpret mode, forward and VJP."""
+(ifft2) oracle in interpret mode, forward and VJP, through the kernel
+registry's backend selection (DESIGN.md §Kernels)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.fourierft import sample_entries
-from repro.kernels import ops, ref
+from repro.kernels import api, ops, ref
 
 
 SHAPES = [
@@ -25,7 +26,7 @@ def test_deltaw_kernel_vs_oracle(d1, d2, n):
     E = sample_entries(d1, d2, n, seed=7)
     c = jax.random.normal(jax.random.PRNGKey(1), (n,))
     r = ref.deltaw_ref(c, E, d1, d2, 300.0)
-    k = ops.fourier_deltaw(c, E, d1, d2, 300.0, use_pallas="interpret")
+    k = ops.fourier_deltaw(c, E, d1, d2, 300.0, backend="interpret")
     np.testing.assert_allclose(k, r, atol=2e-4)
 
 
@@ -35,7 +36,7 @@ def test_dc_kernel_vjp_vs_oracle(d1, d2, n):
     c = jax.random.normal(jax.random.PRNGKey(1), (n,))
     g = jax.random.normal(jax.random.PRNGKey(2), (d1, d2))
     f = lambda c: jnp.vdot(g, ops.fourier_deltaw(c, E, d1, d2, 300.0,
-                                                 use_pallas="interpret"))
+                                                 backend="interpret"))
     dc = jax.grad(f)(c)
     np.testing.assert_allclose(dc, ref.dc_ref(g, E, 300.0), atol=2e-3,
                                rtol=1e-4)
@@ -46,7 +47,7 @@ def test_deltaw_out_dtypes(out_dtype):
     d1, d2, n = 256, 256, 64
     E = sample_entries(d1, d2, n, seed=5)
     c = jax.random.normal(jax.random.PRNGKey(0), (n,))
-    k = ops.fourier_deltaw(c, E, d1, d2, 10.0, use_pallas="interpret",
+    k = ops.fourier_deltaw(c, E, d1, d2, 10.0, backend="interpret",
                            out_dtype=out_dtype)
     assert k.dtype == out_dtype
     r = ref.deltaw_ref(c, E, d1, d2, 10.0)
@@ -58,18 +59,26 @@ def test_deltaw_stacked_vmap():
     d1, d2, n, L = 300, 520, 100, 4
     E = sample_entries(d1, d2, n, seed=7)
     cs = jax.random.normal(jax.random.PRNGKey(3), (L, n))
-    ks = ops.fourier_deltaw(cs, E, d1, d2, 300.0, use_pallas="interpret")
-    es = ops.fourier_deltaw(cs, E, d1, d2, 300.0, use_pallas="never")
+    ks = ops.fourier_deltaw(cs, E, d1, d2, 300.0, backend="interpret")
+    es = ops.fourier_deltaw(cs, E, d1, d2, 300.0, backend="einsum")
     assert ks.shape == (L, d1, d2)
     np.testing.assert_allclose(ks, es, atol=2e-4)
 
 
 def test_einsum_fallback_for_huge_dims():
-    """dims > int32-safe bound must route to the einsum path."""
-    use, interp = ops._use_pallas(152064, 4096, "interpret")
-    assert not use
-    use, interp = ops._use_pallas(4096, 4096, "interpret")
-    assert use and interp
+    """dims over the int32 phase bound must resolve to the einsum backend
+    even when the Pallas path is requested explicitly."""
+    from repro.configs.base import PEFTConfig
+    peft = PEFTConfig(method="fourierft", kernel_backend="interpret")
+    assert api.resolve_op("deltaw", "fourierft", peft,
+                          152064, 4096).backend == "einsum"
+    assert api.resolve_op("deltaw", "fourierft", peft,
+                          4096, 4096).backend == "interpret"
+    # the DCT half-integer phase overflows earlier than the fourier phase
+    assert api.resolve_op("deltaw", "dct", peft.replace(method="dct"),
+                          40000, 128).backend == "einsum"
+    assert api.resolve_op("deltaw", "fourierft", peft,
+                          40000, 128).backend == "interpret"
 
 
 def test_kernel_grad_matches_einsum_grad():
@@ -80,11 +89,11 @@ def test_kernel_grad_matches_einsum_grad():
     tgt = jax.random.normal(jax.random.PRNGKey(6), (3, d2))
 
     def loss(c, mode):
-        dw = ops.fourier_deltaw(c, E, d1, d2, 50.0, use_pallas=mode)
+        dw = ops.fourier_deltaw(c, E, d1, d2, 50.0, backend=mode)
         return jnp.mean((x @ dw - tgt) ** 2)
 
     gk = jax.grad(lambda c: loss(c, "interpret"))(c)
-    ge = jax.grad(lambda c: loss(c, "never"))(c)
+    ge = jax.grad(lambda c: loss(c, "einsum"))(c)
     np.testing.assert_allclose(gk, ge, atol=1e-4, rtol=1e-3)
 
 
@@ -97,6 +106,6 @@ def test_kernel_property_sweep(mh, mw, n, seed):
     n = min(n, d1 * d2)
     E = sample_entries(d1, d2, n, seed=seed)
     c = jax.random.normal(jax.random.PRNGKey(seed), (n,))
-    k = ops.fourier_deltaw(c, E, d1, d2, 100.0, use_pallas="interpret")
+    k = ops.fourier_deltaw(c, E, d1, d2, 100.0, backend="interpret")
     r = ref.deltaw_ref(c, E, d1, d2, 100.0)
     np.testing.assert_allclose(k, r, atol=2e-4)
