@@ -1,0 +1,100 @@
+"""Paged KV cache vs dense per-slot cache under shared-prefix traffic
+(DESIGN.md §Paging).
+
+Replays staggered traces through the continuous scheduler with the dense
+per-slot cache and with the paged cache, at 0% / 50% / 90% shared-prefix
+traffic: a 224-token page-aligned system prompt + short unique tails for
+the shared fraction, never-repeating full-length prompts for the rest
+(fresh rng per run, so the 0% cell stays truly 0% across the warm-up and
+the measured run — repeating "unique" traffic would silently become 100%
+shared on the second pass). Reports, per cell:
+
+  - TTFT as wall-clock prime-prefill latency (`prime_s_mean/p90`): the
+    decode-step-clock TTFT is identical by construction (admission emits
+    the first token), so what moves is the prefill compute the prefix
+    cache removes — the paged prime runs only the unshared tail (a
+    16-token bucket instead of the 256-token full prompt);
+  - end-to-end tokens/s (whole-drain wall clock, prefills included);
+  - a bit-exactness cross-check of paged vs dense outputs.
+
+Acceptance: paged TTFT < dense TTFT at >= 50% shared traffic (at 0% the
+two sit near parity — the block-table gather is the only overhead). Uses a
+4-layer d_model=256 config so prefill compute dominates dispatch; at the
+tests' tiny reduced scale every prime is dispatch-bound and the effect
+would drown."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import PEFTConfig
+from repro.models import build
+from repro.serve import ContinuousScheduler, Engine, Request
+from benchmarks.common import emit
+
+SLOTS = 4
+MAX_LEN = 288
+PAGE = 16
+N_REQ = 12
+PREFIX_LEN = 224                   # 14 shared pages
+GAP = 1.0                          # arrival spacing (decode steps)
+BUDGETS = [3, 5, 2, 6, 4, 3] * 2
+PREFIX = (np.arange(PREFIX_LEN) * 5 + 3) % 256
+
+
+def _requests(share: float, salt: int):
+    """share = fraction opening with the common system prompt; the rest are
+    fully unique prompts of the same total length, never repeated across
+    runs (salt)."""
+    rng = np.random.default_rng(1000 * salt + int(share * 100))
+    n_shared = round(share * N_REQ)
+    reqs = []
+    for i in range(N_REQ):
+        tail = rng.integers(0, 256, size=4 + i % 5)
+        if i < n_shared:
+            toks = np.concatenate([PREFIX, tail])
+        else:
+            toks = rng.integers(0, 256, size=PREFIX_LEN + len(tail))
+        reqs.append(Request(prompt=jnp.asarray(toks, jnp.int32),
+                            max_new=BUDGETS[i]))
+    return reqs
+
+
+def _run(sched, share: float):
+    arrivals = [i * GAP for i in range(N_REQ)]
+    sched.serve(_requests(share, salt=1), arrivals)    # warm-up: compile
+    sched.reset_metrics()                              # + seed the prefix
+    reqs = sched.serve(_requests(share, salt=2), arrivals)
+    return reqs, sched.metrics.summary()
+
+
+def main():
+    cfg = C.reduced(C.get("yi-6b")).replace(
+        vocab=256, d_model=256, num_layers=4, d_ff=768,
+        n_heads=8, n_kv=4, head_dim=32)
+    model = build(cfg, PEFTConfig(method="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_slots=SLOTS, max_len=MAX_LEN)
+    dense = ContinuousScheduler(eng, paged=False)
+    paged = ContinuousScheduler(eng, page_size=PAGE)
+
+    for share in (0.0, 0.5, 0.9):
+        d_reqs, d = _run(dense, share)
+        p_reqs, p = _run(paged, share)
+        mismatch = sum(a.out != b.out for a, b in zip(p_reqs, d_reqs))
+        assert mismatch == 0, "paged outputs diverged from dense"
+        for tag, s in (("dense", d), ("paged", p)):
+            emit(f"serve_paging/{tag}_share{int(share * 100)}",
+                 s["prime_s_mean"] * 1e6,
+                 f"ttft_prime_ms={s['prime_s_mean'] * 1e3:.1f};"
+                 f"ttft_prime_p90_ms={s['prime_s_p90'] * 1e3:.1f};"
+                 f"tok_s={s['tokens_per_s']:.0f};"
+                 f"occupancy={s['occupancy_mean']:.2f}")
+        emit(f"serve_paging/speedup_share{int(share * 100)}", 0.0,
+             f"ttft_ratio={d['prime_s_mean'] / max(p['prime_s_mean'], 1e-9):.2f};"
+             f"tok_s_ratio={p['tokens_per_s'] / max(d['tokens_per_s'], 1e-9):.2f};"
+             f"mismatches={mismatch}/{N_REQ}")
+
+
+if __name__ == "__main__":
+    main()

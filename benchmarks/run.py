@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_grad_comm",
     "benchmarks.bench_adapter_bank",
     "benchmarks.bench_serve_scheduler",
+    "benchmarks.bench_serve_paging",
 ]
 
 

@@ -177,6 +177,10 @@ def batch_specs(batch: Dict, mesh: Mesh, shape: ShapeConfig):
         name = path.split("/")[-1]
         if name == "positions" and nd == 3:
             return P(None, b, *([None] * (nd - 2)))
+        if name == "block_table":
+            # (B, pages_per_seq) slot->page map rides the batch axes; the
+            # (pages_per_seq,) prefill-time row replicates
+            return P(b, None) if nd == 2 else P(*([None] * nd))
         return P(b, *([None] * (nd - 1)))
     return _walk_specs(batch, rule)
 
@@ -193,6 +197,12 @@ def cache_specs(cache: Dict, mesh: Mesh, cfg: ModelConfig,
         shp = tuple(getattr(leaf, "shape", ()))
         nd = len(shp)
         name = path.split("/")[-1]
+        if nd == 5 and name in ("pk", "pv"):
+            # paged page pool (L, n_pages, page_size, K, hd): pages are a
+            # GLOBAL pool shared by every slot (block tables map slots onto
+            # them), so the page dim replicates — only the KV-head dim
+            # follows the projection sharding like the dense cache
+            return P(None, None, None, _maybe(shp[3], mesh, "model"), None)
         if nd >= 4 and name in ("k", "v", "attn_k", "attn_v"):
             return P(None, b, None, _maybe(shp[3], mesh, "model"),
                      *([None] * (nd - 4)))

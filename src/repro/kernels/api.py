@@ -5,8 +5,13 @@ Every adapter hot-spot computation is a `KernelOp` keyed by
 
     op      — "deltaw" (dense ΔW materialization), "factored_apply"
               (y += x @ ΔW without ΔW), "bank_apply" (row-batched factored
-              apply for the serving adapter bank)
-    method  — the `AdapterMethod.name` that owns the math
+              apply for the serving adapter bank), "paged_attention"
+              (block-table decode attention for the paged KV cache)
+    method  — the `AdapterMethod.name` that owns the math. Model-side ops
+              (paged_attention) are owned by a non-adapter shim object with
+              the same `name`/`kernel_ops()` surface
+              (kernels/paged_attention.OWNER) — the registry only needs
+              those two attributes
     backend — "pallas" (compiled TPU), "interpret" (Pallas interpret mode),
               "einsum" (pure-jnp reference)
 
@@ -34,7 +39,7 @@ import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
-OPS = ("deltaw", "factored_apply", "bank_apply")
+OPS = ("deltaw", "factored_apply", "bank_apply", "paged_attention")
 BACKENDS = ("pallas", "interpret", "einsum")
 
 # candidate chain per requested policy; first supported op wins. "interpret"

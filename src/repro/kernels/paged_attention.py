@@ -1,0 +1,181 @@
+"""Paged decode attention: K/V gathered through a block table (DESIGN.md
+§Paging).
+
+The continuous-batching runtime's paged KV cache stores rows in a global
+pool of fixed-size pages, `(n_pages, page_size, K, hd)` per layer; each
+decode slot maps its logical positions onto pages through a block-table row
+`(pages_per_seq,)`. This module provides the decode attention over that
+layout as a registry `KernelOp` keyed ``("paged_attention", "attention",
+backend)``:
+
+    einsum    — gather the slot's whole logical window with `jnp.take` and
+                run the dense ragged-kv_len decode attention
+                (`models.attention.direct_attention`). Reference backend and
+                the fp32 bit-exactness anchor: the gathered window holds the
+                same rows the dense per-slot cache holds, masked columns
+                contribute exact zeros, so paged == dense bitwise.
+    pallas    — TPU kernel: grid (B, pages_per_seq) with the block table as
+                a scalar-prefetch argument, so each grid step DMAs exactly
+                ONE page picked by `block_table[b, p]` (the gather happens
+                in the index_map — no (B, max_len) window is ever
+                materialized in HBM). Online-softmax accumulation across
+                the page steps, flash-style.
+    interpret — the same kernel under Pallas interpret mode (any platform;
+                the CI conformance backend).
+
+`OWNER` is the registry owner shim: `paged_attention` is model-side, not an
+adapter-method op, so a module-level object carries the `name` /
+`kernel_ops()` surface `kernels.api.ensure_method` collects from.
+
+fn signature (all backends):
+
+    fn(q, k_pages, v_pages, block_table, kv_len) -> out
+
+    q           (B, 1, H, dh)   this step's query rows
+    k_pages     (P, ps, K, dh)  one layer's page pool (post-RoPE K)
+    v_pages     (P, ps, K, dh)
+    block_table (B, PPS) int32  per-slot logical-page -> physical-page map
+    kv_len      (B,)     int32  per-slot ragged validity (positions >= kv_len
+                                are masked; dirt rows contribute exact 0)
+    out         (B, 1, H, dh)   in v_pages.dtype
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.api import KernelOp
+from repro.models import attention as attn_mod
+
+NEG_INF = attn_mod.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# einsum reference
+# ---------------------------------------------------------------------------
+
+def paged_attention_einsum(q, k_pages, v_pages, block_table, kv_len):
+    """Gather the logical window through the block table, then run the dense
+    ragged decode attention. (B, PPS*ps) window rows at positions >= kv_len
+    are dirt — masked to exact zeros, so this is bit-identical (fp32) to the
+    dense per-slot cache path whenever the valid rows hold the same values."""
+    B, PPS = block_table.shape
+    ps = k_pages.shape[1]
+    k = jnp.take(k_pages, block_table, axis=0).reshape(
+        B, PPS * ps, *k_pages.shape[2:])
+    v = jnp.take(v_pages, block_table, axis=0).reshape(
+        B, PPS * ps, *v_pages.shape[2:])
+    return attn_mod.direct_attention(q, k, v, causal=False, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: one page per grid step, block table as scalar prefetch
+# ---------------------------------------------------------------------------
+
+def _paged_attn_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, page_size):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # (H, dh)
+    k = k_ref[0]                                   # (ps, K, dh)
+    v = v_ref[0]
+    H, dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qs = q.reshape(K, G, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("kgd,tkd->kgt", qs, k.astype(jnp.float32))
+    cols = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, page_size), 2)
+    valid = cols < kvlen_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # explicit mask after exp: a fully-masked page must contribute 0, not
+    # exp(NEG_INF - NEG_INF) = 1, while m is still at its -inf init
+    pexp = jnp.exp(s - m_new[..., None]) * valid.astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + pexp.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jnp.einsum("kgt,tkd->kgd", pexp,
+                                 v.astype(jnp.float32)))
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out.reshape(1, 1, H, dh).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_table, kv_len, *,
+                           interpret: bool = False):
+    B, _, H, dh = q.shape
+    _, ps, K, _ = k_pages.shape
+    PPS = block_table.shape[1]
+    G = H // K
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_table, kv_len
+        grid=(B, PPS),
+        in_specs=[
+            pl.BlockSpec((1, 1, H, dh), lambda b, p, bt, kl: (b, 0, 0, 0)),
+            # the gather: each (b, p) grid step pulls the ONE physical page
+            # the block table names for slot b's logical page p
+            pl.BlockSpec((1, ps, K, dh),
+                         lambda b, p, bt, kl: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, K, dh),
+                         lambda b, p, bt, kl: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H, dh),
+                               lambda b, p, bt, kl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K, G), jnp.float32),       # running max
+            pltpu.VMEM((K, G), jnp.float32),       # running denom
+            pltpu.VMEM((K, G, dh), jnp.float32),   # running accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page_size=ps),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, dh), v_pages.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(block_table, kv_len, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Registry owner shim
+# ---------------------------------------------------------------------------
+
+class _PagedAttentionOwner:
+    """Registry owner for the model-side paged_attention op: carries the
+    `name`/`kernel_ops()` surface `api.ensure_method` collects, nothing
+    else (no adapter state, no sites)."""
+    name = "attention"
+    has_site_params = False
+
+    def kernel_ops(self):
+        return (
+            KernelOp("paged_attention", self.name, "einsum",
+                     paged_attention_einsum,
+                     note="block-table gather + dense ragged decode attn"),
+            KernelOp("paged_attention", self.name, "pallas",
+                     functools.partial(paged_attention_pallas,
+                                       interpret=False),
+                     platforms=("tpu",),
+                     note="scalar-prefetch page gather, online softmax"),
+            KernelOp("paged_attention", self.name, "interpret",
+                     functools.partial(paged_attention_pallas,
+                                       interpret=True)),
+        )
+
+
+OWNER = _PagedAttentionOwner()

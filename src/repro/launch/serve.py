@@ -67,6 +67,11 @@ def main(argv=None):
                     help="--continuous: number of replayed requests")
     ap.add_argument("--arrival-every", type=float, default=2.0,
                     help="--continuous: arrival gap in decode steps")
+    ap.add_argument("--dense-cache", action="store_true",
+                    help="--continuous: dense per-slot KV cache instead of "
+                         "the default paged cache (DESIGN.md §Paging)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--continuous: paged-cache page size (tokens)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
@@ -129,7 +134,8 @@ def main(argv=None):
     if args.continuous:
         from repro.serve import ContinuousScheduler
         from repro.serve.engine import Request
-        sched = ContinuousScheduler(engine)
+        sched = ContinuousScheduler(engine, paged=not args.dense_cache,
+                                    page_size=args.page_size)
         n = args.trace_n
         reqs = [Request(prompt=prompts[i % len(prompts)],
                         max_new=1 + (5 * i + 3) % args.max_new,

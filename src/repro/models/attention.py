@@ -1,6 +1,7 @@
 """GQA attention: direct path (small S), flash-algorithm chunked path
-(online softmax over KV blocks, O(S·block) memory), and the decode path over a
-KV cache. Supports qk-norm, QKV bias, RoPE/M-RoPE.
+(online softmax over KV blocks, O(S·block) memory), the decode path over a
+KV cache, and the shared-prefix tail-prefill path for the paged cache
+(`prefix_attention`). Supports qk-norm, QKV bias, RoPE/M-RoPE.
 """
 from __future__ import annotations
 
@@ -53,6 +54,40 @@ def direct_attention(q, k, v, *, causal: bool = True,
         s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def prefix_attention(q, k, v, kw, vw, prefix_len) -> jax.Array:
+    """Tail-prefill attention for shared-prefix paged serving (DESIGN.md
+    §Paging): `q`/`k`/`v` are the Sq tail rows of a prompt whose first
+    `prefix_len` tokens are already resident as KV in `kw`/`vw` (the page
+    window gathered through the slot's block table, (B, W, K, dh) with
+    W >= prefix_len; columns >= prefix_len are dirt and masked).
+
+    Tail row i sits at global position prefix_len + i: it attends every
+    valid window column (all global positions < prefix_len) and tail
+    columns j <= i (causal). One concatenated score/softmax/value einsum —
+    the same reduction structure as `direct_attention`, so a zero-length
+    prefix (prefix_len == 0, fully-masked window) reproduces the plain
+    causal prefill bit-for-bit at fp32: masked columns contribute exact
+    zeros to the softmax."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    W = kw.shape[1]
+    scale = dh ** -0.5
+    qs = q.reshape(B, Sq, K, G, dh) * scale
+    k_all = jnp.concatenate([kw.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([vw.astype(v.dtype), v], axis=1)
+    s = _gqa_scores(qs, k_all)                       # (B,K,G,Sq,W+Sq)
+    col = jnp.arange(W + Sq)
+    qpos = jnp.arange(Sq)
+    win_ok = col[None, :] < prefix_len               # window: resident rows
+    tail_ok = (col[None, :] - W) <= qpos[:, None]    # tail: causal
+    mask = jnp.where(col[None, :] < W, win_ok, tail_ok)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v_all)
     return out.reshape(B, Sq, H, dh)
 
 

@@ -149,7 +149,20 @@ class Model:
 
     # ---- decode -----------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   per_slot: bool = False) -> Dict:
+                   per_slot: bool = False, paged: bool = False,
+                   page_size: int = 16,
+                   n_pages: Optional[int] = None) -> Dict:
+        """paged=True allocates the page-pool cache (DESIGN.md §Paging):
+        K/V in (L, n_pages, page_size, ...) pools plus the (B,) per-slot
+        position vector — block tables travel per call, managed host-side
+        by serve/paging.PagedKVCache (which also picks n_pages)."""
+        if paged:
+            if n_pages is None:
+                raise ValueError("paged cache needs n_pages (the runtime "
+                                 "takes it from serve.paging.PagedKVCache)")
+            return self._slot_mod().init_paged_cache(self.cfg, batch,
+                                                     n_pages, page_size,
+                                                     dtype)
         if per_slot:
             return self._slot_mod().init_cache(self.cfg, batch, max_len,
                                                dtype, per_slot=True)
@@ -185,6 +198,20 @@ class Model:
     def reset_slots(self, cache: Dict, mask) -> Dict:
         """Retire the masked slots of a per-slot cache (positions -> 0)."""
         return self._slot_mod().reset_slots(cache, mask)
+
+    def copy_page(self, cache: Dict, src, dst) -> Dict:
+        """COW clone of one physical page of a paged cache (src -> dst)."""
+        return self._slot_mod().copy_page(cache, src, dst)
+
+    def prefill_paged(self, params: Dict, cache: Dict, batch: Dict):
+        """Shared-prefix tail prefill into a paged cache: compute only the
+        unshared tail of the prompt (batch["prefix_len"] tokens are reused
+        from resident pages via batch["block_table"]) and splice its KV
+        into the slot's pages. Returns (next_tokens, cache)."""
+        fn = self._slot_mod().prefill_paged
+        return fn(params["base"], params["peft"], cache, batch, self.cfg,
+                  self.peft, self.sites, constrain=self.constrain,
+                  **self._bank_kwargs(params))
 
     def decode_step(self, params: Dict, cache: Dict, batch: Dict):
         return self._mod.decode_step(params["base"], params["peft"], cache,

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import adapter as adapter_api
+from repro.kernels import api as kernel_api
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.common import (
@@ -218,12 +219,17 @@ def _embed(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
 
 
 def _attn_block(lp: Dict, x: jax.Array, cfg: ModelConfig, linear,
-                positions: jax.Array, *, cache_kv=None, cache_pos=None):
+                positions: jax.Array, *, cache_kv=None, cache_pos=None,
+                paged=None):
     """Pre-norm attention. If cache_kv=(k,v) is given, runs the decode path
     (append at cache_pos, attend over kv_len=cache_pos+1). A scalar
     cache_pos is the lockstep batch; a (B,) cache_pos is the per-slot path
     (continuous batching): each row writes its token at its own position
-    and attends its own ragged kv_len."""
+    and attends its own ragged kv_len. `paged=(block_table, attn_fn)` makes
+    cache_kv a PAGE POOL pair ((P, ps, K, hd) per layer): each row's token
+    is scattered into the page its block-table row maps the position to,
+    and `attn_fn` (the registry-resolved paged_attention backend) gathers
+    K/V through the block table."""
     B = x.shape[0]
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     q = linear(lp, "wq", h).reshape(B, -1, cfg.n_heads, cfg.head_dim)
@@ -238,6 +244,26 @@ def _attn_block(lp: Dict, x: jax.Array, cfg: ModelConfig, linear,
     if cache_kv is None:
         att = attn_mod.attention(q, k, v, causal=True)
         new_kv = (k, v)        # post-RoPE, as stored by the decode path
+    elif paged is not None:
+        bt, attn_fn = paged
+        pk, pv = cache_kv
+        ps = pk.shape[1]
+        # clamp keeps retired slots in-bounds (their block-table rows point
+        # at the slot's reserved scratch page — dirt, never readable); write
+        # targets are unique: each slot's current write page is uniquely
+        # owned (decode positions lie beyond any shared prefix) and scratch
+        # pages are per-slot
+        idx = jnp.minimum(cache_pos, bt.shape[1] * ps - 1)
+        page = jnp.take_along_axis(bt, (idx // ps)[:, None], axis=1)[:, 0]
+        off = idx % ps
+        pk = pk.at[page, off].set(k[:, 0].astype(pk.dtype),
+                                  unique_indices=True,
+                                  mode="promise_in_bounds")
+        pv = pv.at[page, off].set(v[:, 0].astype(pv.dtype),
+                                  unique_indices=True,
+                                  mode="promise_in_bounds")
+        att = attn_fn(q, pk, pv, bt, cache_pos + 1)
+        new_kv = (pk, pv)
     else:
         ck, cv = cache_kv
         if jnp.ndim(cache_pos) == 0:
@@ -444,12 +470,168 @@ def reset_slots(cache: Dict, mask) -> Dict:
     return {**cache, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §Paging): the per-slot decode path over a global
+# pool of fixed-size pages instead of a dense (B, max_len) row per slot.
+# Block tables and page lifecycle live host-side (serve/paging.py); this
+# module owns the device math — pool init, COW page clone, the block-table
+# decode path above, and the shared-prefix tail prefill.
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, dtype=jnp.bfloat16) -> Dict:
+    """Page-pool cache: K/V live in (L, n_pages, page_size, K, hd) pools
+    shared by every slot; `pos` stays the per-slot (B,) position vector.
+    Slots map logical positions onto pages via the `block_table` the
+    runtime passes per decode/prefill call — the pool itself is
+    slot-agnostic."""
+    L = cfg.num_layers
+    shape = (L, n_pages, page_size, cfg.n_kv, cfg.head_dim)
+    return {
+        "pk": jnp.zeros(shape, dtype),
+        "pv": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def copy_page(cache: Dict, src, dst) -> Dict:
+    """Copy-on-write clone: duplicate physical page `src` into `dst` across
+    every layer of both pools (pos untouched). The shared original is never
+    written again — the borrower's tail prefill / decode writes land in the
+    clone (DESIGN.md §Paging, COW rules)."""
+    out = dict(cache)
+    for key in ("pk", "pv"):
+        pool = cache[key]
+        page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+        out[key] = jax.lax.dynamic_update_slice_in_dim(pool, page, dst,
+                                                       axis=1)
+    return out
+
+
+def prefill_paged(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
+                  cfg: ModelConfig, peft: PEFTConfig, sites,
+                  constrain=None, bank=None,
+                  bank_profiles=None) -> Tuple[jax.Array, Dict]:
+    """Shared-prefix tail prefill into the page pool: run ONLY the unshared
+    tail of a prompt whose first `prefix_len` tokens are already resident
+    in pages (reused via the prefix cache), writing the tail's KV through
+    the block table. With prefix_len == 0 this is a full paged prefill —
+    bit-identical (fp32) to the dense prefill + splice path.
+
+    batch:
+      tokens       (1, T)   right-padded tail tokens
+      true_len     (1,)     optional real tail length (absent => T)
+      block_table  (1, PPS) the slot's page map: shared prefix pages first,
+                            then the slot's owned pages, scratch elsewhere
+      window_table (1, WP)  leading slice of block_table covering the
+                            resident prefix (WP pow2-bucketed by the
+                            caller: the attention window costs
+                            O(tail * WP*ps), not O(tail * max_len)).
+                            ABSENT on a cold (no-reuse) prime — that is a
+                            statically distinct graph which skips the page
+                            window entirely (plain causal attention), so
+                            0%-shared traffic pays no window-gather tax
+      prefix_len   ()       reused prefix tokens already resident in pages
+                            (present iff window_table is)
+      slot         ()       slot row whose pos becomes prefix_len + true_len
+      scratch_page ()       pad/overflow KV rows are routed to this page
+                            (the slot's reserved scratch — dirt that decode
+                            overwrites before it can ever be read)
+
+    Returns (next_tokens (1,), cache) like `prefill`."""
+    x = _embed(params, cfg, batch)
+    B, T = x.shape[0], x.shape[1]
+    wt = batch.get("window_table")
+    with_window = wt is not None
+    prefix_len = (jnp.asarray(batch["prefix_len"], jnp.int32) if with_window
+                  else jnp.int32(0))
+    positions = prefix_len + jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32), (B, T))
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
+    bt = batch["block_table"]                        # (1, PPS)
+    ps = cache["pk"].shape[2]
+    cap = bt.shape[1] * ps
+    true_len = batch.get("true_len")
+    tlen = (true_len[0] if true_len is not None
+            else jnp.asarray(T, jnp.int32))
+    # scatter targets: tail row j holds logical position prefix_len + j;
+    # pad rows (j >= tlen) and overflow land in the slot's scratch page —
+    # shared prefix pages are never written (tail positions start past
+    # them), and decode overwrites any dirt before it becomes readable
+    j = jnp.arange(T)
+    logical = prefix_len + j
+    valid = (j < tlen) & (logical < cap)
+    safe = jnp.where(valid, logical, 0)
+    w_page = jnp.where(valid, bt[0, safe // ps],
+                       jnp.asarray(batch["scratch_page"], jnp.int32))
+    w_off = jnp.where(valid, safe % ps, j % ps)
+
+    def body(carry, lp_i):
+        x, pk_all, pv_all = carry
+        lp, li = lp_i
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = linear(lp, "wq", h).reshape(B, -1, cfg.n_heads, cfg.head_dim)
+        k = linear(lp, "wk", h).reshape(B, -1, cfg.n_kv, cfg.head_dim)
+        v = linear(lp, "wv", h).reshape(B, -1, cfg.n_kv, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        if cfg.rope_theta:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+        pk = jax.lax.dynamic_index_in_dim(pk_all, li, 0, keepdims=False)
+        pv = jax.lax.dynamic_index_in_dim(pv_all, li, 0, keepdims=False)
+        if with_window:
+            # resident-prefix window, gathered through the window table
+            # BEFORE the tail writes (the window only reads columns
+            # < prefix_len, which the tail never touches)
+            win = wt.shape[1] * ps
+            kw = jnp.take(pk, wt[0], axis=0).reshape(1, win, cfg.n_kv,
+                                                     cfg.head_dim)
+            vw = jnp.take(pv, wt[0], axis=0).reshape(1, win, cfg.n_kv,
+                                                     cfg.head_dim)
+            att = attn_mod.prefix_attention(q, k, v, kw, vw, prefix_len)
+        else:
+            att = attn_mod.attention(q, k, v, causal=True)
+        x = x + linear(lp, "wo", att.reshape(B, -1, cfg.attn_dim))
+        # page-granular splice of the tail's KV (no unique/sorted claims:
+        # pad rows may collide inside the scratch page — dirt either way)
+        pk = pk.at[w_page, w_off].set(k[0].astype(pk.dtype),
+                                      mode="promise_in_bounds")
+        pv = pv.at[w_page, w_off].set(v[0].astype(pv.dtype),
+                                      mode="promise_in_bounds")
+        pk_all = jax.lax.dynamic_update_index_in_dim(pk_all, pk, li, 0)
+        pv_all = jax.lax.dynamic_update_index_in_dim(pv_all, pv, li, 0)
+        x, _ = _mlp_block(lp, x, cfg, linear, constrain)
+        return (x, pk_all, pv_all), None
+
+    (x, pk, pv), _ = jax.lax.scan(
+        body, (x, cache["pk"], cache["pv"]),
+        (eff_layers, jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+    x = x[jnp.arange(B), jnp.broadcast_to(tlen, (B,)) - 1][:, None]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    pos = cache["pos"].at[jnp.asarray(batch["slot"], jnp.int32)].set(
+        prefix_len + tlen)
+    return next_tokens, {"pk": pk, "pv": pv, "pos": pos}
+
+
 def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
                 cfg: ModelConfig, peft: PEFTConfig, sites,
                 constrain=None, bank=None,
                 bank_profiles=None) -> Tuple[jax.Array, Dict]:
     """One token for every sequence in the batch. batch: tokens (B, 1) (or
-    embeds (B,1,d), positions (3,B,1) for vlm). Returns (next_tokens, cache)."""
+    embeds (B,1,d), positions (3,B,1) for vlm). Returns (next_tokens, cache).
+
+    A paged cache (init_paged_cache: "pk"/"pv" page pools) rides the same
+    per-slot path with batch["block_table"] (B, pages_per_seq) mapping each
+    slot's logical positions onto pool pages; the attention backend is the
+    registry-resolved `paged_attention` op (DESIGN.md §Paging)."""
     x = _embed(params, cfg, batch)
     B = x.shape[0]
     pos = cache["pos"]
@@ -464,6 +646,14 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
         bank=bank, bank_profiles=bank_profiles,
         bank_slots=batch.get("adapter_slots"))
     linear = make_linear(apps, constrain)
+    paged = None
+    if "pk" in cache:
+        from repro.kernels import paged_attention as paged_mod
+        op = kernel_api.resolve_op(
+            "paged_attention", paged_mod.OWNER, peft,
+            d1=cache["pk"].shape[2], d2=cfg.head_dim)
+        paged = (batch["block_table"], op.fn)
+    kk, vk = ("pk", "pv") if paged is not None else ("k", "v")
 
     # cache lives in the scan CARRY and is updated in place per layer —
     # xs/ys threading would materialize two extra cache-sized buffers
@@ -474,14 +664,15 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
         ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
         cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
         x, (ck, cv) = _attn_block(lp, x, cfg, linear, positions,
-                                  cache_kv=(ck, cv), cache_pos=pos)
+                                  cache_kv=(ck, cv), cache_pos=pos,
+                                  paged=paged)
         ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, li, 0)
         cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, li, 0)
         x, _ = _mlp_block(lp, x, cfg, linear, constrain)
         return (x, ck_all, cv_all), None
 
     (x, ck, cv), _ = jax.lax.scan(
-        body, (x, cache["k"], cache["v"]),
+        body, (x, cache[kk], cache[vk]),
         (eff_layers, jnp.arange(cfg.num_layers, dtype=jnp.int32)))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if cfg.n_codebooks:
@@ -490,5 +681,5 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
     else:
         logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
         next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (B,)
-    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    new_cache = {kk: ck, vk: cv, "pos": pos + 1}
     return next_tokens, new_cache

@@ -1,6 +1,9 @@
 from repro.serve.engine import (
     AdapterBank, BankFullError, Engine, Request, merge_for_serving,
 )
+from repro.serve.paging import (
+    OutOfPagesError, PageAllocator, PagedKVCache, PageError, PrefixCache,
+)
 from repro.serve.scheduler import (
     ContinuousScheduler, RequestQueue, ServingMetrics, SlotManager,
 )

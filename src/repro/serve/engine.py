@@ -333,10 +333,12 @@ class Engine:
         # one compiled graph per prompt length (padded batches share it)
         self._prefill = jax.jit(model.prefill)
 
-    def _fresh_cache(self, per_slot: bool = False):
+    def _fresh_cache(self, per_slot: bool = False, paged: bool = False,
+                     page_size: int = 16, n_pages: Optional[int] = None):
         cache = self.model.init_cache(self.batch, self.max_len,
                                       dtype=jnp.dtype(self.model.cfg.dtype),
-                                      per_slot=per_slot)
+                                      per_slot=per_slot, paged=paged,
+                                      page_size=page_size, n_pages=n_pages)
         if self.mesh is not None:
             from repro.dist import sharding as shd
             shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
@@ -387,6 +389,14 @@ class Engine:
         B = self.batch
         params, extra = self._batch_extra(adapter_ids)
         plen = max(int(p.shape[0]) for p in prompts)
+        # same bound as the continuous scheduler (slots.py invariant: the
+        # last generated token is never written — the deepest cache read is
+        # plen + max_new - 1); the lockstep batch pads to the longest prompt
+        if plen + max_new - 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({plen}) + max_new ({max_new}) needs "
+                f"{plen + max_new - 1} cache positions, exceeding "
+                f"max_len ({self.max_len})")
         toks = jnp.zeros((B, plen) + prompts[0].shape[1:], jnp.int32)
         for i, p in enumerate(prompts):
             toks = toks.at[i, :p.shape[0]].set(p)
@@ -431,6 +441,22 @@ class Engine:
                                  f"got {r.max_new}")
             if int(r.prompt.shape[0]) < 1:
                 raise ValueError("request with an empty (length-0) prompt")
+        # validate every chunk's capacity bound UP FRONT (chunking is a
+        # deterministic slice): an infeasible late request must fail before
+        # any earlier chunk runs and mutates its requests' .out
+        for at in range(0, len(requests), self.batch):
+            chunk = requests[at:at + self.batch]
+            plen = max(int(r.prompt.shape[0]) for r in chunk)
+            worst = max(r.max_new for r in chunk)
+            # per-chunk feasibility: every slot pads to the chunk's longest
+            # prompt and decodes until its longest budget — same
+            # `plen + max_new - 1 <= max_len` bound as generate() and the
+            # continuous scheduler (slots.py invariant)
+            if plen + worst - 1 > self.max_len:
+                raise ValueError(
+                    f"lockstep chunk at {at}: prompt ({plen}) + max_new "
+                    f"({worst}) needs {plen + worst - 1} cache positions, "
+                    f"exceeding max_len ({self.max_len})")
         for at in range(0, len(requests), self.batch):
             self._lockstep_chunk(requests[at:at + self.batch], eos_id)
         return requests

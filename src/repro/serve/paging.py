@@ -1,0 +1,348 @@
+"""Paged KV cache with shared-prefix reuse (DESIGN.md §Paging).
+
+Host-side bookkeeping for the continuous-batching runtime's paged cache:
+
+- `PageAllocator` — refcounted free-list over a fixed pool of fixed-size
+  pages. Pages [0, n_reserved) are per-slot scratch (one per decode slot,
+  never allocated or freed): every slot's unallocated block-table entries
+  point at its own scratch page, so decode's unconditional scatter write
+  always has a unique, harmless target.
+- `PrefixCache` — chained hash of page-aligned prompt-prefix chunks ->
+  immutable page. The chain key is seeded with the request's adapter id:
+  factored adapters transform the backbone projections, so a prefix's KV is
+  TENANT-DEPENDENT — sharing it across tenants would serve wrong math
+  (bit-exactness would break). Same-tenant (and bare-base) traffic with a
+  common system prompt is exactly the workload that shares. Each entry
+  holds one allocator reference; entries whose page no live block table
+  shares (refcount == 1) are LRU-evicted when the pool runs dry.
+- `PagedKVCache` — the per-slot block-table manager gluing both to the
+  scheduler's admit/decode/release lifecycle: `plan_admit` matches the
+  prompt against the prefix cache, allocates the slot's owned pages
+  up-front (every position the request can ever write, so decode NEVER
+  allocates — admission is the only point that can defer on capacity), and
+  returns the `PrimePlan` the runtime's tail prefill consumes; `release`
+  frees/derefs every page the slot holds the same step its request
+  completes.
+
+COW rule: shared pages are immutable. Tail prefill and decode only ever
+write positions >= prefix_len, which lie past every shared page — except
+when a prompt is EXACTLY a cached page-aligned prefix: its last token must
+still run through the model for the next-token logits, and that token's KV
+row lives inside the final shared page. `plan_admit` then returns a
+`cow=(src, dst)` pair — the runtime clones src into a freshly-owned dst
+(`Model.copy_page`) and the 1-token tail write lands in the clone, leaving
+the shared original byte-identical for its other holders.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_CHAIN_SEED = b"repro-paging-v1/"
+
+
+class PageError(RuntimeError):
+    """Refcount misuse: double free / ref of a free page / reserved-page
+    free — always a bug in the caller's lifecycle, never load-dependent."""
+
+
+class OutOfPagesError(PageError):
+    """The pool has no free page (after prefix-cache eviction)."""
+
+
+class PageAllocator:
+    """Refcounted free-list over `n_pages` fixed-size pages; pages
+    [0, n_reserved) are reserved per-slot scratch, outside alloc/free."""
+
+    def __init__(self, n_pages: int, n_reserved: int = 0):
+        if n_pages <= n_reserved:
+            raise ValueError(f"pool of {n_pages} pages can't reserve "
+                             f"{n_reserved}")
+        self.n_pages = n_pages
+        self.n_reserved = n_reserved
+        self._free = list(range(n_reserved, n_pages))
+        self._refs = [0] * n_pages
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPagesError(
+                f"page pool exhausted ({self.n_pages} pages, "
+                f"{self.n_reserved} reserved)")
+        page = self._free.pop()
+        self._refs[page] = 1
+        return page
+
+    def ref(self, page: int) -> None:
+        if page < self.n_reserved or self._refs[page] < 1:
+            raise PageError(f"ref of unallocated page {page}")
+        self._refs[page] += 1
+
+    def free(self, page: int) -> None:
+        if page < self.n_reserved:
+            raise PageError(f"free of reserved scratch page {page}")
+        if self._refs[page] < 1:
+            raise PageError(f"double free of page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+
+
+class PrefixCache:
+    """Chained-hash prefix chunks -> immutable pages, LRU-evictable."""
+
+    def __init__(self, allocator: PageAllocator):
+        self._alloc = allocator
+        self._entries: "OrderedDict[bytes, int]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages(self) -> Tuple[int, ...]:
+        return tuple(self._entries.values())
+
+    @staticmethod
+    def chain_keys(prompt: np.ndarray, page_size: int,
+                   adapter_id: Optional[str]) -> List[bytes]:
+        """One key per full page-aligned chunk of `prompt`, each hashing
+        the ENTIRE prefix through it (chained), seeded by the tenant."""
+        keys = []
+        h = _CHAIN_SEED + (adapter_id or "").encode()
+        for c in range(len(prompt) // page_size):
+            chunk = np.ascontiguousarray(
+                prompt[c * page_size:(c + 1) * page_size], dtype=np.int32)
+            h = hashlib.blake2b(h + chunk.tobytes(),
+                                digest_size=16).digest()
+            keys.append(h)
+        return keys
+
+    def match(self, keys: List[bytes]) -> List[int]:
+        """Pages of the longest cached chain prefix (LRU-touched)."""
+        pages = []
+        for key in keys:
+            page = self._entries.get(key)
+            if page is None:
+                break
+            self._entries.move_to_end(key)
+            pages.append(page)
+        return pages
+
+    def insert(self, key: bytes, page: int) -> None:
+        """Register `page` as the immutable holder of chunk `key` (takes
+        one allocator reference). No-op when the chunk is already cached —
+        the existing page stays canonical."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        self._alloc.ref(page)
+        self._entries[key] = page
+
+    def evict_until_free(self, need: int) -> int:
+        """Drop LRU entries whose page no block table shares (refcount 1)
+        until `need` pages are free; returns the number evicted."""
+        evicted = 0
+        for key in list(self._entries):
+            if self._alloc.free_count() >= need:
+                break
+            page = self._entries[key]
+            if self._alloc.refcount(page) == 1:
+                del self._entries[key]
+                self._alloc.free(page)
+                evicted += 1
+        return evicted
+
+
+@dataclass
+class PrimePlan:
+    """Everything the runtime's paged prime needs for one admission."""
+    slot: int
+    prefix_len: int            # reused tokens already resident in pages
+    tail: np.ndarray           # prompt[prefix_len:] — what prefill computes
+    block_row: np.ndarray      # (pages_per_seq,) int32
+    cow: Optional[Tuple[int, int]]   # (src, dst) page clone, or None
+    scratch_page: int
+    chunk_keys: List[bytes]    # chain keys of the prompt's full chunks —
+                               # published via register_prompt AFTER the
+                               # prime fills the pages
+
+
+class PagedKVCache:
+    """Block-table + page-lifecycle manager for one paged decode pool."""
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
+                 n_pages: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = pps = -(-max_len // page_size)
+        if n_pages is None:
+            # worst case (zero sharing): every slot owns its full window;
+            # headroom lets the prefix cache retain pages across requests
+            n_pages = n_slots + n_slots * pps + 2 * pps
+        if n_pages < n_slots + pps:
+            raise ValueError(
+                f"{n_pages} pages cannot hold {n_slots} scratch pages plus "
+                f"one full {pps}-page window")
+        self.n_pages = n_pages
+        self.allocator = PageAllocator(n_pages, n_reserved=n_slots)
+        self.prefix_cache = PrefixCache(self.allocator)
+        # scratch page of slot i is page i: unallocated entries default there
+        self.block_tables = np.tile(
+            np.arange(n_slots, dtype=np.int32)[:, None], (1, pps))
+        self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self._device_bt = None
+
+    # ---- admission --------------------------------------------------------
+    def plan_admit(self, slot: int, prompt: np.ndarray, max_new: int,
+                   adapter_id: Optional[str] = None,
+                   keys: Optional[List[bytes]] = None) -> Optional[PrimePlan]:
+        """Build the slot's block-table row for one request: match the
+        prompt's page-aligned prefix against the prefix cache, allocate
+        every owned page the request can ever write (positions
+        0..S+max_new-2 — the last generated token is never written), and
+        register the prompt's own full chunks for future sharing. Returns
+        None when the pool (after eviction) cannot cover the owned pages —
+        the scheduler defers the request, exactly like a pinned-full bank.
+
+        keys: precomputed `PrefixCache.chain_keys(prompt, page_size,
+        adapter_id)` — a deferred request is re-offered every admission
+        cycle, and the chain hash is a pure function of the prompt, so the
+        scheduler memoizes it instead of re-hashing per offer."""
+        if self._slot_pages[slot]:
+            raise PageError(f"slot {slot} still holds pages")
+        prompt = np.asarray(prompt)
+        S = int(prompt.shape[0])
+        ps = self.page_size
+        total_pages = -(-(S + max_new - 1) // ps)
+        if total_pages > self.pages_per_seq:
+            raise ValueError(
+                f"prompt ({S}) + max_new ({max_new}) needs {total_pages} "
+                f"pages > pages_per_seq ({self.pages_per_seq})")
+        if keys is None:
+            keys = PrefixCache.chain_keys(prompt, ps, adapter_id)
+        shared = self.prefix_cache.match(keys)
+        cow_src = None
+        if shared and len(shared) * ps >= S:
+            # the prompt IS a cached page-aligned prefix: its last token
+            # must still be recomputed for the next-token logits, and its
+            # KV row lives inside the final shared page -> COW that page
+            cow_src = shared.pop()
+        # pin the matched pages (and the COW source) BEFORE any eviction:
+        # once their original slots drained they sit at refcount 1 (cache-
+        # only), exactly what the LRU pass below frees — matching without
+        # pinning would let eviction pull the pages out from under us
+        for page in shared:
+            self.allocator.ref(page)
+        if cow_src is not None:
+            self.allocator.ref(cow_src)
+        n_owned = total_pages - len(shared)
+        if self.allocator.free_count() < n_owned:
+            self.prefix_cache.evict_until_free(n_owned)
+        if self.allocator.free_count() < n_owned:
+            # give the match back before deferring: the entries WE pinned
+            # may be the only evictable pages (e.g. a fully-cached prompt
+            # at the capacity bound on a minimal pool, where the COW clone
+            # needs one page more than a full window) — a cold prime needs
+            # more owned pages but zero pins, and always fits a pool that
+            # holds one full window once the cache is drained
+            for page in shared:
+                self.allocator.free(page)
+            if cow_src is not None:
+                self.allocator.free(cow_src)
+            shared, cow_src = [], None
+            n_owned = total_pages
+            if self.allocator.free_count() < n_owned:
+                self.prefix_cache.evict_until_free(n_owned)
+                if self.allocator.free_count() < n_owned:
+                    return None
+        row = np.full((self.pages_per_seq,), slot, np.int32)
+        held: List[int] = list(shared)         # pinned above
+        for i, page in enumerate(shared):
+            row[i] = page
+        owned = [self.allocator.alloc() for _ in range(n_owned)]
+        for i, page in enumerate(owned):
+            row[len(shared) + i] = page
+            held.append(page)
+        if cow_src is not None:
+            prefix_len = S - 1
+            cow = (cow_src, owned[0])
+            held.append(cow_src)   # the pin guards src until the runtime's
+        else:                      # copy_page; held through the request —
+            prefix_len = len(shared) * ps      # released with the slot
+            cow = None
+        self._slot_pages[slot] = held
+        self.block_tables[slot] = row
+        self._device_bt = None
+        return PrimePlan(slot=slot, prefix_len=prefix_len,
+                         tail=prompt[prefix_len:], block_row=row,
+                         cow=cow, scratch_page=slot, chunk_keys=keys)
+
+    def register_prompt(self, plan: PrimePlan) -> None:
+        """Publish the plan's full page-aligned chunks into the prefix
+        cache. Called by the runtime AFTER the prime prefill has filled the
+        pages — registering inside plan_admit would poison the cache with
+        never-filled pages if the prime raised (the pages are immutable
+        from here on: tail writes stop at position S-1, decode writes start
+        at S, both past every full chunk)."""
+        for c, key in enumerate(plan.chunk_keys):
+            self.prefix_cache.insert(key, int(plan.block_row[c]))
+
+    # ---- lifecycle --------------------------------------------------------
+    def release(self, slot: int) -> None:
+        """Free every page reference the slot holds (owned pages return to
+        the free list unless the prefix cache retains them) and point the
+        slot's block-table row back at its scratch page."""
+        for page in self._slot_pages[slot]:
+            self.allocator.free(page)
+        self._slot_pages[slot] = []
+        self.block_tables[slot, :] = slot
+        self._device_bt = None
+
+    def block_table_device(self):
+        """(n_slots, pages_per_seq) int32 on device, cached until the host
+        tables change — one small transfer per admission/release, not per
+        decode step."""
+        if self._device_bt is None:
+            import jax.numpy as jnp
+            self._device_bt = jnp.asarray(self.block_tables)
+        return self._device_bt
+
+    # ---- invariants (tests) -----------------------------------------------
+    def holders(self) -> Dict[int, int]:
+        """page -> number of holders (slots + prefix cache), non-reserved."""
+        refs: Dict[int, int] = {}
+        for pages in self._slot_pages:
+            for page in pages:
+                refs[page] = refs.get(page, 0) + 1
+        for page in self.prefix_cache.pages:
+            refs[page] = refs.get(page, 0) + 1
+        return refs
+
+    def assert_no_leaks(self) -> None:
+        """Every non-reserved page's refcount equals its holder count, and
+        unheld pages are exactly the free list."""
+        refs = self.holders()
+        free = 0
+        for page in range(self.n_slots, self.n_pages):
+            expect = refs.get(page, 0)
+            got = self.allocator.refcount(page)
+            if got != expect:
+                raise AssertionError(
+                    f"page {page}: refcount {got} != {expect} holders")
+            free += expect == 0
+        if free != self.allocator.free_count():
+            raise AssertionError(
+                f"{free} unheld pages but free list has "
+                f"{self.allocator.free_count()}")

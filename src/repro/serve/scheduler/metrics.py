@@ -9,9 +9,22 @@ end-to-end throughput, not a per-step extrapolation.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+
+def nearest_rank(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile: the ceil(q*N)-th smallest value (1-indexed).
+    Unlike the floor-index `vals[int(q*(N-1))]`, this never under-reports
+    the tail at small N — e.g. p90 of 10 samples is the 9th, not the 8th,
+    and p99 of any N < 100 is the maximum."""
+    if not sorted_vals:
+        return 0.0
+    i = max(0, min(len(sorted_vals) - 1,
+                   math.ceil(q * len(sorted_vals)) - 1))
+    return sorted_vals[i]
 
 
 @dataclass
@@ -21,6 +34,10 @@ class RequestMetrics:
     first_token: Optional[float] = None
     finished: Optional[float] = None
     n_tokens: int = 0
+    prime_s: Optional[float] = None    # wall-clock prime-prefill latency —
+                                       # the TTFT component arrival gaps
+                                       # can't hide (shared-prefix reuse
+                                       # shrinks exactly this)
 
     @property
     def ttft_steps(self) -> Optional[float]:
@@ -61,6 +78,9 @@ class ServingMetrics:
         if r.first_token is None:
             r.first_token = t
 
+    def on_prime(self, rid: int, seconds: float) -> None:
+        self.requests[rid].prime_s = seconds
+
     def on_finish(self, rid: int, t: float) -> None:
         self.requests[rid].finished = t
 
@@ -76,6 +96,8 @@ class ServingMetrics:
     def summary(self) -> Dict[str, float]:
         ttfts = sorted(r.ttft_steps for r in self.requests.values()
                        if r.ttft_steps is not None)
+        primes = sorted(r.prime_s for r in self.requests.values()
+                        if r.prime_s is not None)
         occ = self.occupancy
         wall = self.wall_s if self._t0 is None \
             else self.wall_s + (time.perf_counter() - self._t0)
@@ -85,8 +107,11 @@ class ServingMetrics:
             "steps": self.steps,
             "occupancy_mean": sum(occ) / len(occ) if occ else 0.0,
             "ttft_steps_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            "ttft_steps_p90": ttfts[int(0.9 * (len(ttfts) - 1))]
-            if ttfts else 0.0,
+            "ttft_steps_p50": nearest_rank(ttfts, 0.50),
+            "ttft_steps_p90": nearest_rank(ttfts, 0.90),
+            "ttft_steps_p99": nearest_rank(ttfts, 0.99),
+            "prime_s_mean": sum(primes) / len(primes) if primes else 0.0,
+            "prime_s_p90": nearest_rank(primes, 0.90),
             "wall_s": wall,
             "tokens_per_s": self.total_tokens / wall if wall > 0 else 0.0,
         }

@@ -66,7 +66,13 @@ class RequestQueue:
         return rid
 
     def arrived(self, now: float) -> List[ScheduledRequest]:
-        return [sr for sr in self._pending if sr.arrival <= now]
+        """Arrived prefix of the pending list. `_pending` is sorted by
+        (arrival, rid), so the arrived set is exactly the slice before the
+        first `arrival > now` — found by bisection instead of the previous
+        full linear scan per admission cycle."""
+        cut = bisect.bisect_right(self._pending, now,
+                                  key=lambda sr: sr.arrival)
+        return self._pending[:cut]
 
     def next_arrival(self) -> Optional[float]:
         """Earliest pending arrival stamp (the idle-skip target), or None."""
@@ -81,6 +87,8 @@ class RequestQueue:
         order = self.arrived(now)
         if self.policy == "resident_first":
             resident = set(resident)
+            # only the ARRIVED slice is (stably) re-ranked — the pending
+            # tail keeps its arrival order untouched
             order = sorted(          # stable: fcfs within each class
                 order, key=lambda sr: (sr.request.adapter_id is not None
                                        and sr.request.adapter_id

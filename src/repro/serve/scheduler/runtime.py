@@ -1,14 +1,19 @@
 """Continuous-batching runtime over the slot Engine (DESIGN.md §Scheduler).
 
-One persistent fixed-shape per-slot KV cache (`Model.init_cache(...,
-per_slot=True)`): every slot decodes at its own position/ragged kv_len,
-requests are admitted into FREE slots the moment both a slot and the slot's
-tenant row are available, and a slot is recycled the very step its request
-completes. In-flight prefill primes a single slot — a batch-1 prefill over
-the prompt's pow2 bucket, spliced into the live cache with
-`Model.write_slot` — while the other slots keep decoding. All steady-state
-shapes are fixed: the decode graph NEVER recompiles as requests come and
-go; prefill/splice compile once per pow2 prompt bucket.
+One persistent fixed-shape KV cache: by default a PAGED cache (DESIGN.md
+§Paging) — K/V in a global pool of fixed-size pages, each slot mapping its
+logical positions onto pages through a block-table row, with page-aligned
+prompt prefixes reused across requests (same tenant / bare base) so the
+prime prefill computes only the unshared tail; `paged=False` keeps the
+dense per-slot cache (`Model.init_cache(..., per_slot=True)`). Either way
+every slot decodes at its own position/ragged kv_len, requests are
+admitted into FREE slots the moment a slot, the tenant's bank row, AND (if
+paged) the request's worst-case page count are available, and a slot is
+recycled — its pages freed — the very step its request completes.
+In-flight prefill primes a single slot while the other slots keep
+decoding. All steady-state shapes are fixed: the decode graph NEVER
+recompiles as requests come and go (the block table is a same-shape array
+per call); prefill/splice compile once per pow2 prompt bucket.
 
 Admission is adapter-bank-aware: a request's tenant is touched when
 resident, loaded via `load_from_checkpoint` when not, with the tenants of
@@ -25,6 +30,7 @@ row-parallel.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -32,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import BankFullError, Engine, Request
+from repro.serve.paging import PagedKVCache, PrefixCache, PrimePlan
 from repro.serve.scheduler.metrics import ServingMetrics
 from repro.serve.scheduler.queue import RequestQueue, ScheduledRequest
 from repro.serve.scheduler.slots import SlotManager
@@ -57,6 +64,12 @@ class ContinuousScheduler:
     policy:  RequestQueue admission order ("fcfs" | "resident_first").
     bucket:  pad prime prefills to pow2 prompt buckets (bounded compile
              count); False compiles per distinct prompt length instead.
+    paged:   block-table page-pool cache with shared-prefix reuse
+             (DESIGN.md §Paging; the default) vs the dense per-slot cache.
+             Outputs are bit-identical (fp32) either way.
+    page_size / n_pages: paged-cache geometry (n_pages defaults to the
+             zero-sharing worst case plus prefix-cache headroom, see
+             serve/paging.PagedKVCache).
 
     Streaming API: `events()` yields ("admit", rid, slot, t),
     ("token", rid, token, t) and ("done", rid, tokens, t) tuples as they
@@ -66,7 +79,9 @@ class ContinuousScheduler:
     """
 
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
-                 policy: str = "fcfs", bucket: bool = True):
+                 policy: str = "fcfs", bucket: bool = True,
+                 paged: bool = True, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         if not engine.model.supports_slot_cache:
             raise NotImplementedError(
                 f"{engine.model.cfg.name}: continuous batching needs the "
@@ -79,16 +94,32 @@ class ContinuousScheduler:
         self.eos_id = eos_id
         self.bucket = bucket
         self.queue = RequestQueue(policy)
-        self.slots = SlotManager(self.n_slots, eos_id=eos_id)
+        self.pager: Optional[PagedKVCache] = None
+        if paged:
+            self.pager = PagedKVCache(self.n_slots, self.max_len,
+                                      page_size=page_size, n_pages=n_pages)
+        self.slots = SlotManager(self.n_slots, eos_id=eos_id,
+                                 on_release=self._release_pages)
         self.metrics = ServingMetrics()
         self.t = 0.0                           # decode-step clock
         self._decode = engine._decode          # shared jit: per-slot trace
         self._prefill = engine._prefill        # shared jit: (1, P) traces
         self._write = jax.jit(self.model.write_slot, donate_argnums=(0,))
         self._reset = jax.jit(self.model.reset_slots, donate_argnums=(0,))
-        self.cache = engine._fresh_cache(per_slot=True)
+        if paged:
+            self.cache = engine._fresh_cache(
+                paged=True, page_size=self.pager.page_size,
+                n_pages=self.pager.n_pages)
+            self._prefill_paged = jax.jit(self.model.prefill_paged,
+                                          donate_argnums=(1,))
+            self._copy_page = jax.jit(self.model.copy_page,
+                                      donate_argnums=(0,))
+        else:
+            self.cache = engine._fresh_cache(per_slot=True)
         self._cache_dtype = jnp.dtype(self.model.cfg.dtype)
         self._sr: List[Optional[ScheduledRequest]] = [None] * self.n_slots
+        self._plans: Dict[int, PrimePlan] = {}
+        self._prefix_keys: Dict[int, list] = {}   # rid -> memoized hashes
         self._last = [0] * self.n_slots        # per-slot last token (host)
         self._outs: Dict[int, List[int]] = {}
         self._stale = set()                    # freed, not yet reset slots
@@ -102,10 +133,16 @@ class ContinuousScheduler:
         S = int(request.prompt.shape[0])
         if S < 1:
             raise ValueError("empty (length-0) prompt")
-        if S + request.max_new > self.max_len:
+        # cache-position bound (slots.py invariant: the LAST generated token
+        # is never written, so the final position used is S + max_new - 2
+        # and the deepest read is kv_len = S + max_new - 1). The previous
+        # `S + max_new > max_len` guard rejected feasible requests by one
+        # token — a request may generate through exactly max_len positions.
+        if S + request.max_new - 1 > self.max_len:
             raise ValueError(
-                f"prompt ({S}) + max_new ({request.max_new}) tokens exceed "
-                f"the persistent cache's max_len ({self.max_len})")
+                f"prompt ({S}) + max_new ({request.max_new}) needs "
+                f"{S + request.max_new - 1} cache positions, exceeding the "
+                f"persistent cache's max_len ({self.max_len})")
         if request.adapter_id is not None and self.bank is None:
             raise ValueError("request has an adapter_id but the engine "
                              "has no bank")
@@ -139,40 +176,116 @@ class ContinuousScheduler:
             return False
         return True
 
+    def _try_admit(self, sr: ScheduledRequest) -> bool:
+        """Admission callback for the queue: bank residency first, then (if
+        paged) the page plan — matching the prefix cache and allocating the
+        slot's worst-case pages up-front, so decode never allocates. False
+        defers the request without head-of-line blocking the queue."""
+        if not self._ensure_resident(sr):
+            return False
+        if self.pager is not None:
+            memo = self._prefix_keys.get(sr.rid)
+            if memo is None:                     # hash + host-copy once;
+                prompt = np.asarray(sr.request.prompt)   # deferred requests
+                memo = (prompt, PrefixCache.chain_keys(  # are re-offered
+                    prompt, self.pager.page_size,        # every cycle
+                    sr.request.adapter_id))
+                self._prefix_keys[sr.rid] = memo
+            prompt, keys = memo
+            plan = self.pager.plan_admit(
+                self.slots.free_slots()[0], prompt, sr.request.max_new,
+                adapter_id=sr.request.adapter_id, keys=keys)
+            if plan is None:
+                return False
+            self._plans[sr.rid] = plan
+            self._prefix_keys.pop(sr.rid, None)
+        return True
+
+    def _release_pages(self, slot: int, snapshot) -> None:
+        """SlotManager release hook: a recycled slot frees its pages the
+        same scheduler step its request completes."""
+        if self.pager is not None:
+            self.pager.release(slot)
+
+    def _bucketed_prompt(self, tokens, n: int) -> Tuple[int, Dict]:
+        """(padded length P, {tokens, true_len?}) for a batch-1 prefill:
+        pow2-bucketed, clamped to max_len (the bucket of a near-max prompt
+        can overshoot a non-pow2 cache), `true_len` present iff padded —
+        the ONE place both prime flavors get their prefill shapes from."""
+        P = min(_bucket(n), self.max_len) if self.bucket else n
+        batch: Dict = {"tokens":
+                       jnp.zeros((1, P), jnp.int32).at[0, :n].set(tokens)}
+        if P != n:
+            batch["true_len"] = jnp.full((1,), n, jnp.int32)
+        return P, batch
+
     def _prime(self, sr: ScheduledRequest, slot: int) -> int:
         """In-flight prefill: run the prompt through a batch-1 scratch
         prefill and splice its KV into `slot` of the live cache. Returns the
-        first generated token."""
+        first generated token. On the paged cache, only the UNSHARED TAIL of
+        the prompt is computed (`Model.prefill_paged`): reused prefix pages
+        enter the tail's attention through the block-table window, after the
+        COW clone when the plan calls for one."""
         prompt = sr.request.prompt
-        S = int(prompt.shape[0])
-        # clamp to max_len: submit() guarantees S < max_len, but the pow2
-        # bucket of a near-max prompt can overshoot a non-pow2 cache
-        P = min(_bucket(S), self.max_len) if self.bucket else S
-        toks = jnp.zeros((1, P), jnp.int32).at[0, :S].set(prompt)
-        batch: Dict = {"tokens": toks}
-        if P != S:
-            batch["true_len"] = jnp.full((1,), S, jnp.int32)
         params = self.engine.params
+        extra: Dict = {}
         if self.bank is not None:
-            batch["adapter_slots"] = self.bank.slot_rows(
+            extra["adapter_slots"] = self.bank.slot_rows(
                 [sr.request.adapter_id], 1)
             params = {**params, "bank": self.bank.params}
-        scratch = self.model.init_cache(1, P, dtype=self._cache_dtype)
-        nt, scratch = self._prefill(params, scratch, batch)
-        self.cache = self._write(
-            self.cache, {"k": scratch["k"], "v": scratch["v"]}, slot, S)
-        return int(np.asarray(nt).reshape(-1)[0])
+        t0 = time.perf_counter()
+        if self.pager is not None:
+            plan = self._plans.pop(sr.rid)
+            if plan.cow is not None:
+                self.cache = self._copy_page(self.cache, *plan.cow)
+            _, batch = self._bucketed_prompt(jnp.asarray(plan.tail),
+                                             int(plan.tail.shape[0]))
+            batch.update(block_table=jnp.asarray(plan.block_row[None]),
+                         slot=jnp.int32(slot),
+                         scratch_page=jnp.int32(plan.scratch_page), **extra)
+            if plan.prefix_len:
+                # warm prime: the attention window gathers only the pow2
+                # bucket of the PREFIX pages (compile count stays log-
+                # bounded) — not the full pages_per_seq window, which would
+                # cost O(tail * max_len) at long max_len. Cold primes omit
+                # both keys and take the statically window-free graph.
+                ps = self.pager.page_size
+                wp = min(_bucket(-(-plan.prefix_len // ps), lo=1),
+                         self.pager.pages_per_seq)
+                batch["window_table"] = jnp.asarray(
+                    plan.block_row[None, :wp])
+                batch["prefix_len"] = jnp.int32(plan.prefix_len)
+            nt, self.cache = self._prefill_paged(params, self.cache, batch)
+        else:
+            S = int(prompt.shape[0])
+            P, batch = self._bucketed_prompt(prompt, S)
+            batch.update(extra)
+            scratch = self.model.init_cache(1, P, dtype=self._cache_dtype)
+            nt, scratch = self._prefill(params, scratch, batch)
+            self.cache = self._write(
+                self.cache, {"k": scratch["k"], "v": scratch["v"]}, slot, S)
+        tok = int(np.asarray(nt).reshape(-1)[0])
+        if self.pager is not None:
+            # publish the prompt's chunks for future sharing only past the
+            # host sync above (async dispatch errors surface there) — a
+            # failed prime must not leave prefix-cache entries pointing at
+            # never-filled pages
+            self.pager.register_prompt(plan)
+        self.metrics.on_prime(sr.rid, time.perf_counter() - t0)
+        return tok
 
     def _admit_ready(self) -> Iterator[Event]:
         while self.slots.free_slots() and len(self.queue):
             resident = self.bank.resident_ids if self.bank else ()
-            sr = self.queue.pop_next(self.t, self._ensure_resident,
+            sr = self.queue.pop_next(self.t, self._try_admit,
                                      resident=resident)
             if sr is None:
                 return
+            plan = self._plans.get(sr.rid)
             slot = self.slots.acquire(sr.rid, budget=sr.request.max_new,
                                       adapter_id=sr.request.adapter_id,
-                                      prompt_len=int(sr.request.prompt.shape[0]))
+                                      prompt_len=int(sr.request.prompt.shape[0]),
+                                      slot=plan.slot if plan else None)
             self._sr[slot] = sr
             self.metrics.on_admit(sr.rid, self.t)
             tok = self._prime(sr, slot)
@@ -210,6 +323,8 @@ class ContinuousScheduler:
         self._flush_stale()
         active = self.slots.active_slots()
         params, extra = self.engine.params, {}
+        if self.pager is not None:
+            extra["block_table"] = self.pager.block_table_device()
         if self.bank is not None:
             extra["adapter_slots"] = self.bank.slot_rows(
                 self.slots.adapter_ids(), self.n_slots)

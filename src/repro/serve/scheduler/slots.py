@@ -12,17 +12,26 @@ State machine (per slot of the fixed-shape batch):
   through EOS) tokens: note_token decrements the budget and reports
   completion the step it hits zero or emits `eos_id`;
 - **recycling is immediate** — release returns the slot to FREE the same
-  scheduler step its request completes.
+  scheduler step its request completes, and the `on_release` hook fires
+  inside that transition: the paged runtime frees the slot's KV pages
+  there, so page lifetime is exactly slot lifetime (DESIGN.md §Paging).
 
 The lockstep engine (Engine.generate_requests) and the continuous runtime
 (scheduler.runtime) both complete requests through note_token/release, so
 "stop contributing once budget or EOS is hit" is one shared code path.
+
+Capacity invariant the runtimes' admission guards derive from: the final
+cache position a request WRITES is `prompt_len + taken - 2` and the
+deepest it READS is `prompt_len + taken - 1` (the last generated token is
+never written) — so a request fits a max_len cache iff
+`prompt_len + max_new - 1 <= max_len`, one token more than the historical
+`prompt_len + max_new <= max_len` guard admitted.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 FREE = "FREE"
 ACTIVE = "ACTIVE"
@@ -42,12 +51,17 @@ class SlotState:
 
 
 class SlotManager:
-    """Tracks per-slot occupancy/budget for a fixed pool of decode slots."""
+    """Tracks per-slot occupancy/budget for a fixed pool of decode slots.
 
-    def __init__(self, n_slots: int, eos_id: Optional[int] = None):
+    on_release: optional hook `f(slot, snapshot)` fired as a slot recycles
+    (ACTIVE -> FREE) — the paged runtime frees the slot's KV pages here."""
+
+    def __init__(self, n_slots: int, eos_id: Optional[int] = None,
+                 on_release: Optional[Callable] = None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.eos_id = eos_id
+        self.on_release = on_release
         self._slots = [SlotState() for _ in range(n_slots)]
 
     def __len__(self) -> int:
@@ -77,18 +91,26 @@ class SlotManager:
 
     def acquire(self, rid: int, budget: int,
                 adapter_id: Optional[str] = None,
-                prompt_len: int = 0) -> int:
-        """Assign the lowest FREE slot to request `rid`. Raises RuntimeError
-        when no slot is free or `rid` is already assigned (a double
-        assignment would interleave two requests' tokens in one KV row)."""
+                prompt_len: int = 0, slot: Optional[int] = None) -> int:
+        """Assign the lowest FREE slot to request `rid` — or the explicit
+        `slot` (the paged runtime plans page tables against a specific slot
+        before acquiring; passing it here makes the pairing a contract
+        instead of an ordering assumption). Raises RuntimeError when no
+        slot is free, the requested slot isn't, or `rid` is already
+        assigned (a double assignment would interleave two requests'
+        tokens in one KV row)."""
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
         if any(s.state == ACTIVE and s.rid == rid for s in self._slots):
             raise RuntimeError(f"request {rid} is already assigned a slot")
-        free = self.free_slots()
-        if not free:
-            raise RuntimeError("no free slot")
-        slot = free[0]
+        if slot is not None:
+            if self._slots[slot].state != FREE:
+                raise RuntimeError(f"requested slot {slot} is not FREE")
+        else:
+            free = self.free_slots()
+            if not free:
+                raise RuntimeError("no free slot")
+            slot = free[0]
         self._slots[slot] = SlotState(state=ACTIVE, rid=rid,
                                       adapter_id=adapter_id, budget=budget,
                                       taken=0, prompt_len=prompt_len)
@@ -111,10 +133,12 @@ class SlotManager:
 
     def release(self, slot: int) -> SlotState:
         """Recycle `slot` (ACTIVE -> FREE); returns the occupant's final
-        state snapshot."""
+        state snapshot. Fires `on_release` after the transition."""
         s = self._slots[slot]
         if s.state != ACTIVE:
             raise RuntimeError(f"release of {s.state} slot {slot}")
         snapshot = dataclasses.replace(s)
         self._slots[slot] = SlotState()
+        if self.on_release is not None:
+            self.on_release(slot, snapshot)
         return snapshot

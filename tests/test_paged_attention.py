@@ -1,0 +1,119 @@
+"""`paged_attention` kernel-op conformance (DESIGN.md §Paging / §Kernels):
+every registered backend against the einsum reference, the einsum backend
+against the dense ragged decode attention under an identity block table,
+registry capability routing (interpret on any platform, pallas TPU-gated,
+auto -> einsum off-TPU), and kv_len edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PEFTConfig
+from repro.kernels import api as kernel_api
+from repro.kernels import paged_attention as pa
+from repro.models import attention as attn_mod
+
+
+def _case(seed, B=3, H=8, K=2, dh=16, n_pages=14, ps=4, pps=6):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, K, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, K, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, n_pages, size=(B, pps)), jnp.int32)
+    kv_len = jnp.asarray(rng.integers(1, pps * ps + 1, size=(B,)), jnp.int32)
+    return q, kp, vp, bt, kv_len
+
+
+class TestConformance:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_interpret_matches_einsum(self, seed):
+        q, kp, vp, bt, kv_len = _case(seed)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_mha_no_gqa_groups(self):
+        """K == H (G = 1) exercises the degenerate group reshape."""
+        q, kp, vp, bt, kv_len = _case(7, H=4, K=4)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_kv_len_edges(self):
+        """kv_len = 1 (a freshly reset slot) and kv_len = full window."""
+        q, kp, vp, bt, _ = _case(11)
+        pps, ps = bt.shape[1], kp.shape[1]
+        kv_len = jnp.asarray([1, pps * ps, ps], jnp.int32)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        assert not np.isnan(np.asarray(out)).any()
+
+    def test_einsum_equals_dense_ragged_attention(self):
+        """Identity block table over a pool that IS the dense cache laid
+        out page by page: paged einsum == direct_attention bit-for-bit
+        (fp32) — the exactness anchor the runtime acceptance rests on."""
+        rng = np.random.default_rng(3)
+        B, H, K, dh, ps, pps = 2, 4, 2, 8, 4, 5
+        max_len = pps * ps
+        ck = jnp.asarray(rng.normal(size=(B, max_len, K, dh)), jnp.float32)
+        cv = jnp.asarray(rng.normal(size=(B, max_len, K, dh)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(B, 1, H, dh)), jnp.float32)
+        kv_len = jnp.asarray([7, 18], jnp.int32)
+        # pool: page b*pps + p holds row-block p of batch row b
+        kp = ck.reshape(B * pps, ps, K, dh)
+        vp = cv.reshape(B * pps, ps, K, dh)
+        bt = jnp.arange(B * pps, dtype=jnp.int32).reshape(B, pps)
+        ref = attn_mod.direct_attention(q, ck, cv, causal=False,
+                                        kv_len=kv_len)
+        out = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+class TestRegistryRouting:
+    def test_backends_registered(self):
+        assert set(kernel_api.backends_for("paged_attention", pa.OWNER)) \
+            == {"pallas", "interpret", "einsum"}
+
+    def test_auto_resolves_einsum_off_tpu(self):
+        op = kernel_api.resolve_op("paged_attention", pa.OWNER,
+                                   PEFTConfig(), platform="cpu")
+        assert op.backend == "einsum"
+
+    def test_auto_resolves_pallas_on_tpu(self):
+        op = kernel_api.resolve_op("paged_attention", pa.OWNER,
+                                   PEFTConfig(), platform="tpu")
+        assert op.backend == "pallas"
+
+    def test_interpret_policy_any_platform(self):
+        op = kernel_api.resolve_op(
+            "paged_attention", pa.OWNER,
+            PEFTConfig(kernel_backend="interpret"), platform="cpu")
+        assert op.backend == "interpret"
+
+    def test_resolved_ops_agree(self):
+        q, kp, vp, bt, kv_len = _case(5)
+        outs = {}
+        for backend in ("einsum", "interpret"):
+            op = kernel_api.resolve_op("paged_attention", pa.OWNER,
+                                       PEFTConfig(kernel_backend=backend))
+            outs[backend] = np.asarray(op.fn(q, kp, vp, bt, kv_len))
+        np.testing.assert_allclose(outs["interpret"], outs["einsum"],
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Pallas path needs a TPU")
+class TestCompiledTPU:
+    def test_pallas_matches_einsum(self):
+        q, kp, vp, bt, kv_len = _case(0, dh=128, ps=8)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-2, rtol=2e-2)

@@ -1,0 +1,421 @@
+"""Paged KV cache with shared-prefix reuse (DESIGN.md §Paging): allocator
+refcount/leak invariants (property + fuzz), block-table manager lifecycle,
+prefix sharing + COW byte-preservation, fp32 bit-exactness of the paged
+runtime vs the dense-cache runtime and the serial engine (staggered
+arrivals, heterogeneous adapters), zero decode recompiles across churn,
+page-exhaustion deferral, and the capacity-bound boundary (generate at
+exactly max_len) on all three serving paths."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.checkpoint import adapters as adapter_ckpt
+from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
+from repro.core import peft as peft_mod
+from repro.models import build
+from repro.serve import (
+    ContinuousScheduler, Engine, OutOfPagesError, PageAllocator,
+    PagedKVCache, PageError, Request,
+)
+from repro.serve.engine import AdapterBank
+
+
+def _cfg(arch="yi-6b"):
+    return C.reduced(C.get(arch)).replace(vocab=64, param_dtype="float32",
+                                          dtype="float32")
+
+
+def _base_model():
+    model = build(_cfg(), PEFTConfig(method="none"))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _serial(engine, req):
+    if req.adapter_id is not None and \
+            req.adapter_id not in engine.bank.resident_ids:
+        engine.bank.load_from_checkpoint(req.adapter_id)
+    out = engine.generate([req.prompt], max_new=req.max_new,
+                          adapter_ids=[req.adapter_id]
+                          if engine.bank is not None else None)[0]
+    return [int(t) for t in np.asarray(out).reshape(-1)]
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator invariants
+# ---------------------------------------------------------------------------
+
+class TestPageAllocator:
+    def _fuzz(self, ops):
+        """Drive alloc/ref/free against an external refcount model: counts
+        never go negative (misuse raises PageError), nothing leaks."""
+        alloc = PageAllocator(12, n_reserved=2)
+        refs = {}                              # page -> expected refcount
+        for op, arg in ops:
+            if op == "alloc":
+                if len(refs) == 10:
+                    with pytest.raises(OutOfPagesError):
+                        alloc.alloc()
+                else:
+                    p = alloc.alloc()
+                    assert p >= 2 and p not in refs
+                    refs[p] = 1
+            elif op == "ref":
+                p = 2 + arg % 10
+                if p in refs:
+                    alloc.ref(p)
+                    refs[p] += 1
+                else:
+                    with pytest.raises(PageError):
+                        alloc.ref(p)
+            else:                              # free
+                p = 2 + arg % 10
+                if p in refs:
+                    alloc.free(p)
+                    refs[p] -= 1
+                    if refs[p] == 0:
+                        del refs[p]
+                else:
+                    with pytest.raises(PageError):
+                        alloc.free(p)
+            for p in range(2, 12):
+                assert alloc.refcount(p) == refs.get(p, 0)
+                assert alloc.refcount(p) >= 0
+            assert alloc.free_count() == 10 - len(refs)
+
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "ref", "free"]),
+                              st.integers(min_value=0, max_value=9)),
+                    max_size=300))
+    @settings(max_examples=50, deadline=None)
+    def test_refcount_invariants_property(self, ops):
+        self._fuzz(ops)
+
+    def test_refcount_invariants_fuzz(self):
+        rng = random.Random(0)
+        for _ in range(20):
+            ops = [(rng.choice(["alloc", "ref", "free"]), rng.randrange(10))
+                   for _ in range(200)]
+            self._fuzz(ops)
+
+    def test_reserved_pages_untouchable(self):
+        alloc = PageAllocator(4, n_reserved=2)
+        with pytest.raises(PageError):
+            alloc.free(0)
+        with pytest.raises(PageError):
+            alloc.ref(1)
+        assert sorted(alloc.alloc() for _ in range(2)) == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache manager lifecycle
+# ---------------------------------------------------------------------------
+
+class TestPagedKVCacheManager:
+    def test_admit_release_cycles_no_leak(self):
+        """N random admit/release cycles: refcounts always equal holder
+        counts, every page returns to the free list once prefix entries
+        are evicted."""
+        rng = random.Random(1)
+        pager = PagedKVCache(n_slots=3, max_len=32, page_size=4)
+        live = {}
+        for step in range(300):
+            if live and (len(live) == 3 or rng.random() < 0.5):
+                slot = rng.choice(list(live))
+                del live[slot]
+                pager.release(slot)
+            else:
+                slot = next(s for s in range(3) if s not in live)
+                S = rng.randrange(1, 20)
+                prompt = np.asarray([rng.randrange(64) for _ in range(S)])
+                mn = rng.randrange(1, 32 - S + 2)
+                plan = pager.plan_admit(slot, prompt, mn)
+                if plan is not None:
+                    pager.register_prompt(plan)
+                    live[slot] = True
+                    assert plan.prefix_len + len(plan.tail) == S
+            pager.assert_no_leaks()
+        for slot in list(live):
+            pager.release(slot)
+        pager.assert_no_leaks()
+        pager.prefix_cache.evict_until_free(pager.n_pages)
+        assert pager.allocator.free_count() == pager.n_pages - pager.n_slots
+
+    def test_shared_prefix_maps_same_pages(self):
+        pager = PagedKVCache(n_slots=2, max_len=32, page_size=4)
+        prompt = np.arange(11)
+        a = pager.plan_admit(0, prompt, 4)
+        pager.register_prompt(a)
+        b = pager.plan_admit(1, np.concatenate([prompt[:8], [50, 51]]), 4)
+        pager.register_prompt(b)
+        assert a.prefix_len == 0                       # cold: full prefill
+        assert b.prefix_len == 8                       # two full chunks hit
+        assert list(b.block_row[:2]) == list(a.block_row[:2])
+        assert b.block_row[2] != a.block_row[2]        # divergent page: own
+        for p in a.block_row[:2]:
+            assert pager.allocator.refcount(int(p)) == 3   # 2 slots + cache
+        pager.release(0)
+        pager.release(1)
+        for p in a.block_row[:2]:
+            assert pager.allocator.refcount(int(p)) == 1   # cache retains
+        pager.assert_no_leaks()
+
+    def test_adapter_id_keys_the_prefix(self):
+        """Factored adapters make prefix KV tenant-dependent: the chain
+        hash is seeded with the adapter id, so cross-tenant prompts never
+        share pages even when the tokens match."""
+        pager = PagedKVCache(n_slots=2, max_len=32, page_size=4)
+        prompt = np.arange(8)
+        a = pager.plan_admit(0, prompt, 4, adapter_id="tenant-a")
+        pager.register_prompt(a)
+        b = pager.plan_admit(1, prompt, 4, adapter_id="tenant-b")
+        pager.register_prompt(b)
+        assert b.prefix_len == 0
+        assert set(a.block_row[:2]).isdisjoint(set(b.block_row[:2]))
+        pager.release(0)
+        pager.release(1)
+        c = pager.plan_admit(0, prompt, 4, adapter_id="tenant-a")
+        assert c.prefix_len == 7                       # same tenant: COW hit
+        pager.release(0)
+        pager.assert_no_leaks()
+
+    def test_cow_plan_on_exact_prefix_prompt(self):
+        """A prompt that IS a cached page-aligned prefix recomputes only
+        its last token, into a CLONE of the final shared page."""
+        pager = PagedKVCache(n_slots=2, max_len=32, page_size=4)
+        prompt = np.arange(8)
+        a = pager.plan_admit(0, prompt, 4)
+        pager.register_prompt(a)
+        b = pager.plan_admit(1, prompt, 4)
+        assert b.cow is not None and b.prefix_len == 7
+        src, dst = b.cow
+        assert src == a.block_row[1] and dst == b.block_row[1]
+        assert b.block_row[0] == a.block_row[0]        # page 0 truly shared
+        assert len(b.tail) == 1 and b.tail[0] == prompt[-1]
+        pager.release(0)
+        pager.release(1)
+        pager.assert_no_leaks()
+
+    def test_eviction_cannot_free_just_matched_pages(self):
+        """Regression: under pool pressure, plan_admit's LRU eviction must
+        not free the shared pages it just matched (refcount-1 cache-only
+        entries are exactly what eviction targets) — matching pins first.
+        Unfixed this raised PageError('ref of unallocated page') and
+        crashed the serving loop instead of deferring/admitting."""
+        pager = PagedKVCache(n_slots=1, max_len=32, page_size=4, n_pages=9)
+        prompt = np.arange(8)
+        pager.register_prompt(pager.plan_admit(0, prompt, 23))  # 2 chunks
+        pager.release(0)
+        # needs 7 owned pages with only 6 free: forces eviction while the
+        # matched chunks are the only evictable entries — the pins make
+        # eviction skip them, and the cold fallback then reclaims the match
+        # to admit anyway (unfixed: PageError crash out of allocator.ref)
+        plan = pager.plan_admit(0, prompt, 25)
+        assert plan is not None and plan.prefix_len == 0   # cold fallback
+        pager.release(0)
+        pager.assert_no_leaks()
+
+    def test_cow_at_capacity_bound_on_minimal_pool_falls_back_cold(self):
+        """Regression: a fully-cached page-aligned prompt at the capacity
+        bound needs pps+1 pages on the COW path (pinned src + clone), which
+        a minimal pool (n_slots + pps) can never supply — plan_admit must
+        give the match back and run a cold prime rather than defer forever
+        (which hard-crashed events() with 'scheduler stalled')."""
+        pager = PagedKVCache(n_slots=1, max_len=32, page_size=8, n_pages=5)
+        prompt = np.arange(32)
+        plan = pager.plan_admit(0, prompt, 1)
+        assert plan is not None and plan.prefix_len == 0
+        pager.register_prompt(plan)
+        pager.release(0)
+        plan = pager.plan_admit(0, prompt, 1)      # full COW match, 0 free
+        assert plan is not None and plan.prefix_len == 0   # cold fallback
+        pager.release(0)
+        pager.assert_no_leaks()
+        # end-to-end: the scheduler serves it instead of stalling
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=1, max_len=32)
+        sched = ContinuousScheduler(eng, page_size=8, n_pages=5)
+        for _ in range(2):
+            reqs = [Request(prompt=jnp.asarray(prompt, jnp.int32),
+                            max_new=1)]
+            sched.serve(reqs)
+            assert reqs[0].out == _serial(eng, reqs[0])
+        sched.pager.assert_no_leaks()
+
+    def test_plan_rejects_oversized_and_defers_on_pressure(self):
+        pager = PagedKVCache(n_slots=2, max_len=16, page_size=4,
+                             n_pages=2 + 4)            # ONE full window
+        with pytest.raises(ValueError, match="pages_per_seq"):
+            pager.plan_admit(0, np.arange(10), 16)
+        plan = pager.plan_admit(0, np.arange(10), 7)   # all 4 pages
+        assert plan is not None
+        pager.register_prompt(plan)
+        assert pager.plan_admit(1, np.arange(5), 4) is None   # defer
+        pager.release(0)
+        pager.prefix_cache.evict_until_free(pager.n_pages)
+        assert pager.plan_admit(1, np.arange(5), 4) is not None
+        pager.release(1)
+        pager.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end exactness: paged runtime vs dense runtime vs serial engine
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 2, 3, 4, 5], [7, 8, 9], [11, 12], [3, 1, 4, 1, 5, 9],
+           [2, 7, 1, 8], [6, 6, 6], [9, 8, 7, 6, 5, 4, 3], [5, 5]]
+
+
+def _trace(max_news, adapter_ids=None):
+    return [Request(prompt=jnp.array(PROMPTS[i % len(PROMPTS)], jnp.int32),
+                    max_new=mn,
+                    adapter_id=adapter_ids[i] if adapter_ids else None)
+            for i, mn in enumerate(max_news)]
+
+
+class TestPagedExactness:
+    def test_paged_bitwise_equals_dense_and_serial(self):
+        """Acceptance: the paged runtime reproduces the dense-cache runtime
+        AND the serial engine bit-for-bit (fp32) on the staggered trace."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        arrivals = [0, 0, 1, 2, 3, 5, 8, 9]
+        budgets = [4, 7, 2, 5, 1, 6, 3, 8]
+        paged = _trace(budgets)
+        ContinuousScheduler(eng, page_size=8).serve(paged, arrivals)
+        dense = _trace(budgets)
+        ContinuousScheduler(eng, paged=False).serve(dense, arrivals)
+        assert [r.out for r in paged] == [r.out for r in dense]
+        for r in paged:
+            assert r.out == _serial(eng, r)
+
+    def test_heterogeneous_adapters_paged_bitwise(self, tmp_path):
+        """Mixed tenants (two methods + bare base) through the PAGED
+        runtime reproduce each request's serial outputs exactly."""
+        model, params = _base_model()
+        profiles = {
+            "fourierft": PEFTConfig(method="fourierft", n=16, alpha=25.0,
+                                    param_dtype="float32"),
+            "lora": PEFTConfig(method="lora", lora_r=2,
+                               param_dtype="float32"),
+        }
+        for i, (tid, m) in enumerate(zip(("tenant-fft", "tenant-lora"),
+                                         ("fourierft", "lora"))):
+            prof = profiles[m]
+            tree = peft_mod.init_adapters(jax.random.PRNGKey(10 + i),
+                                          model.sites, prof)
+            tree = jax.tree.map(
+                lambda x: x + 0.05 if jnp.issubdtype(x.dtype, jnp.floating)
+                else x, tree)
+            trainable = set(adapter_api.resolve(m).trainable_leaves(prof))
+            tree = {s: {k: v for k, v in d.items() if k in trainable}
+                    for s, d in tree.items()}
+            adapter_ckpt.export_adapter(str(tmp_path), tid, tree, prof)
+        bank = AdapterBank(model, profiles, capacity=4,
+                           checkpoint_dir=str(tmp_path))
+        eng = Engine(model, params, batch_slots=3, max_len=48, bank=bank)
+        ids = ["tenant-fft", "tenant-lora", None, "tenant-fft",
+               "tenant-lora", None]
+        reqs = _trace([5, 3, 6, 2, 4, 3], adapter_ids=ids)
+        ContinuousScheduler(eng, page_size=8).serve(
+            reqs, arrivals=[0, 0, 0, 1, 3, 4])
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+
+    def test_shared_prefix_traffic_exact_and_cow_preserves_bytes(self):
+        """Requests sharing a page-aligned system prompt reuse its pages —
+        including the full-prompt COW case — and stay bit-exact; the shared
+        pages' bytes survive every borrower untouched."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        sched = ContinuousScheduler(eng, page_size=8)
+        sys_p = list((np.arange(16) * 3 + 1) % 64)
+        cold = Request(prompt=jnp.array(sys_p + [2, 9], jnp.int32),
+                       max_new=4)
+        sched.serve([cold])
+        assert len(sched.pager.prefix_cache) == 2
+        shared_pages = list(sched.pager.prefix_cache.pages)
+        before = np.asarray(sched.cache["pk"][:, shared_pages])
+        tails = [[7], [13, 21, 3], []]       # [] => prompt == prefix: COW
+        reqs = [Request(prompt=jnp.array(sys_p + t, jnp.int32), max_new=4)
+                for t in tails]
+        sched.serve(reqs, arrivals=[0, 1, 2])
+        after = np.asarray(sched.cache["pk"][:, shared_pages])
+        np.testing.assert_array_equal(before, after)
+        for r in [cold] + reqs:
+            assert r.out == _serial(eng, r)
+        sched.pager.assert_no_leaks()
+
+    def test_zero_decode_recompiles_across_churn(self):
+        """Acceptance: after the first admissions the paged decode graph
+        never recompiles — churn only changes block-table VALUES."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=48)
+        sched = ContinuousScheduler(eng, page_size=8)
+        sched.serve(_trace([3, 1, 4, 2, 5]))
+        compiled = eng._decode._cache_size()
+        reqs = _trace([2, 4, 1, 3, 2, 5, 1, 2])
+        sched.serve(reqs, arrivals=[0, 0, 1, 2, 2, 3, 5, 6])
+        assert eng._decode._cache_size() == compiled
+        for r in reqs:
+            assert r.out is not None
+        sched.pager.assert_no_leaks()
+
+    def test_page_exhaustion_defers_not_fails(self):
+        """A request that cannot get its worst-case pages waits for a slot
+        to drain (like a pinned-full bank) and then completes exactly."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=32)
+        sched = ContinuousScheduler(eng, page_size=8,
+                                    n_pages=2 + 4)     # ONE full window
+        reqs = [Request(prompt=jnp.array(PROMPTS[0], jnp.int32), max_new=28),
+                Request(prompt=jnp.array(PROMPTS[1], jnp.int32), max_new=6)]
+        for r in reqs:
+            sched.submit(r)
+        events = list(sched.events())
+        admit_t = {e[1]: e[3] for e in events if e[0] == "admit"}
+        done_t = {e[1]: e[3] for e in events if e[0] == "done"}
+        assert admit_t[1] >= done_t[0]       # waited for pages, not a slot
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        sched.pager.assert_no_leaks()
+
+
+class TestCapacityBoundary:
+    """Satellite: the `prompt + max_new - 1 <= max_len` bound, proven by
+    generating at exactly max_len on every serving path."""
+
+    def test_scheduler_generates_at_exactly_max_len(self):
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=16)
+        for paged in (True, False):
+            prompt = jnp.array(PROMPTS[0], jnp.int32)          # S=5
+            reqs = [Request(prompt=prompt, max_new=12)]        # 5+12-1 == 16
+            ContinuousScheduler(eng, paged=paged,
+                                page_size=4).serve(reqs)
+            assert len(reqs[0].out) == 12
+            assert reqs[0].out == _serial(eng, reqs[0])
+
+    def test_generate_boundary(self):
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=16)
+        p = jnp.array(PROMPTS[0], jnp.int32)
+        out = eng.generate([p], max_new=12)[0]                 # exactly 16
+        assert out.shape[0] == 12
+        with pytest.raises(ValueError, match="max_len"):
+            eng.generate([p], max_new=13)
+
+    def test_generate_requests_boundary(self):
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=16)
+        p = jnp.array(PROMPTS[0], jnp.int32)
+        reqs = [Request(prompt=p, max_new=12)]
+        eng.generate_requests(reqs)
+        assert len(reqs[0].out) == 12
+        assert reqs[0].out == _serial(eng, reqs[0])
+        with pytest.raises(ValueError, match="max_len"):
+            eng.generate_requests([Request(prompt=p, max_new=13)])

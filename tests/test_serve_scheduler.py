@@ -323,10 +323,86 @@ class TestEngineGuards:
             sched.submit(Request(prompt=p, max_new=0))
         with pytest.raises(ValueError, match="empty"):
             sched.submit(Request(prompt=jnp.zeros((0,), jnp.int32)))
+        # capacity bound (slots.py invariant): the last generated token is
+        # never written, so prompt+max_new-1 positions must fit — max_new=14
+        # (= 16 positions) is feasible, 15 is the first infeasible budget
         with pytest.raises(ValueError, match="max_len"):
-            sched.submit(Request(prompt=p, max_new=14))
+            sched.submit(Request(prompt=p, max_new=15))
+        sched.submit(Request(prompt=p, max_new=14))   # exactly max_len: ok
         with pytest.raises(ValueError, match="no bank"):
             sched.submit(Request(prompt=p, max_new=2, adapter_id="t"))
+
+
+class TestMetricsQuantiles:
+    """Satellite: nearest-rank (ceil) quantiles — the old floor index
+    `vals[int(0.9*(N-1))]` under-reported the tail at small N."""
+
+    def test_nearest_rank_known_distribution(self):
+        from repro.serve.scheduler.metrics import nearest_rank
+        vals = list(range(1, 11))                  # 1..10
+        assert nearest_rank(vals, 0.50) == 5       # ceil(5) -> 5th
+        assert nearest_rank(vals, 0.90) == 9       # ceil(9) -> 9th (old: 8)
+        assert nearest_rank(vals, 0.99) == 10      # N < 100 -> the max
+        assert nearest_rank([7.0], 0.90) == 7.0
+        assert nearest_rank([], 0.90) == 0.0
+        # quartile textbook case: 11 samples
+        vals = [15, 20, 35, 40, 50] + [60, 70, 80, 90, 100, 110]
+        assert nearest_rank(vals, 0.25) == 35      # ceil(2.75) -> 3rd
+
+    def test_summary_percentiles(self):
+        from repro.serve.scheduler.metrics import ServingMetrics
+        m = ServingMetrics()
+        for rid in range(10):
+            m.on_arrival(rid, 0.0)
+            m.on_token(rid, float(rid + 1))        # TTFTs 1..10
+        s = m.summary()
+        assert s["ttft_steps_p50"] == 5
+        assert s["ttft_steps_p90"] == 9
+        assert s["ttft_steps_p99"] == 10
+
+
+class TestQueueBisect:
+    """Satellite: `arrived` cuts at the first arrival > now via bisect —
+    behavior must be unchanged vs the full linear scan."""
+
+    def _naive_arrived(self, pending, now):
+        return [sr for sr in pending if sr.arrival <= now]
+
+    def test_randomized_trace_no_behavior_change(self):
+        from repro.serve.scheduler.queue import RequestQueue
+        rng = random.Random(7)
+        p = jnp.array([1, 2], jnp.int32)
+        for policy in ("fcfs", "resident_first"):
+            q = RequestQueue(policy)
+            for _ in range(60):
+                q.push(Request(prompt=p, max_new=2,
+                               adapter_id=rng.choice(
+                                   [None, "t-a", "t-b", "t-c"])),
+                       arrival=rng.choice([0.0, 1.0, 2.5, 2.5, 7.0, 11.0]))
+            now = 0.0
+            popped = []
+            while len(q):
+                assert q.arrived(now) == self._naive_arrived(q.pending, now)
+                # admit every other offer: exercises the turned-down path
+                flip = [True]
+                sr = q.pop_next(now, lambda _: flip.__setitem__(0, not flip[0])
+                                or not flip[0], resident=("t-a",))
+                if sr is not None:
+                    assert sr.arrival <= now
+                    popped.append(sr.rid)
+                else:
+                    now += 0.5
+            assert sorted(popped) == list(range(60))
+
+    def test_arrived_is_sorted_prefix(self):
+        from repro.serve.scheduler.queue import RequestQueue
+        q = RequestQueue()
+        p = jnp.array([1], jnp.int32)
+        for arr in (5.0, 1.0, 3.0, 1.0, 9.0):
+            q.push(Request(prompt=p, max_new=1), arrival=arr)
+        assert [sr.arrival for sr in q.arrived(3.0)] == [1.0, 1.0, 3.0]
+        assert q.arrived(0.5) == []
+        assert len(q.arrived(100.0)) == 5
 
 
 class TestLockstepCompletionFix:
