@@ -1,11 +1,20 @@
 """Benchmark driver — one module per paper table/figure (+ systems benches).
 Prints ``name,us_per_call,derived`` CSV. `python -m benchmarks.run [--only X]`.
+
+Serving rows (`serve_*`) are additionally written to ``BENCH_serve.json``
+at the repo root — tok/s, TTFT quantiles, speculative acceptance — so the
+serving perf trajectory is machine-diffable across PRs instead of living
+only in stdout.
 """
 import argparse
 import importlib
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+from benchmarks.common import ROWS
 
 MODULES = [
     "benchmarks.bench_table1_params",
@@ -22,7 +31,37 @@ MODULES = [
     "benchmarks.bench_adapter_bank",
     "benchmarks.bench_serve_scheduler",
     "benchmarks.bench_serve_paging",
+    "benchmarks.bench_serve_spec",
 ]
+
+SERVE_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serve.json"
+
+
+def parse_row(row: str) -> tuple:
+    """`name,us_per_call,k=v;k=v` -> (name, {us_per_call, k: v, ...}) with
+    numeric values parsed (the emit() contract keeps values float-able;
+    anything else stays a string rather than failing the dump)."""
+    name, us, derived = row.split(",", 2)
+    rec = {"us_per_call": float(us)}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            rec[k] = float(v)
+        except ValueError:
+            rec[k] = v
+    return name, rec
+
+
+def dump_serve_json(rows, path=SERVE_JSON) -> dict:
+    """Write every `serve_*` row as one JSON object keyed by row name
+    (empty runs — e.g. `--only table1` — leave the previous file alone)."""
+    serve = dict(parse_row(r) for r in rows if r.startswith("serve"))
+    if serve:
+        path.write_text(json.dumps(serve, indent=2, sort_keys=True) + "\n")
+    return serve
 
 
 def main() -> None:
@@ -42,6 +81,8 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)
+    if dump_serve_json(ROWS):
+        print(f"# serving rows -> {SERVE_JSON}", flush=True)
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

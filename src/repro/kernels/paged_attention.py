@@ -31,13 +31,19 @@ fn signature (all backends):
 
     fn(q, k_pages, v_pages, block_table, kv_len) -> out
 
-    q           (B, 1, H, dh)   this step's query rows
+    q           (B, W, H, dh)   a window of W consecutive query rows per
+                                slot (W == 1 for plain decode; W == k+1 for
+                                draft verification, DESIGN.md §Speculation)
     k_pages     (P, ps, K, dh)  one layer's page pool (post-RoPE K)
     v_pages     (P, ps, K, dh)
     block_table (B, PPS) int32  per-slot logical-page -> physical-page map
-    kv_len      (B,)     int32  per-slot ragged validity (positions >= kv_len
-                                are masked; dirt rows contribute exact 0)
-    out         (B, 1, H, dh)   in v_pages.dtype
+    kv_len      (B,)     int32  valid length seen by query row 0 (its own KV
+                                row included); row j attends columns
+                                < kv_len + j — causal inside the window,
+                                ragged across slots. Dirt rows contribute
+                                exact 0. W == 1 reduces to the single-query
+                                decode mask (positions >= kv_len masked).
+    out         (B, W, H, dh)   in v_pages.dtype
 """
 from __future__ import annotations
 
@@ -60,16 +66,20 @@ NEG_INF = attn_mod.NEG_INF
 
 def paged_attention_einsum(q, k_pages, v_pages, block_table, kv_len):
     """Gather the logical window through the block table, then run the dense
-    ragged decode attention. (B, PPS*ps) window rows at positions >= kv_len
-    are dirt — masked to exact zeros, so this is bit-identical (fp32) to the
-    dense per-slot cache path whenever the valid rows hold the same values."""
+    ragged decode attention. (B, PPS*ps) window rows at positions >= the
+    per-query limit are dirt — masked to exact zeros, so this is
+    bit-identical (fp32) to the dense per-slot cache path whenever the valid
+    rows hold the same values. q_len == 1 keeps the original single-query
+    path; q_len > 1 applies the in-window causal mask (col < kv_len + j)."""
     B, PPS = block_table.shape
     ps = k_pages.shape[1]
     k = jnp.take(k_pages, block_table, axis=0).reshape(
         B, PPS * ps, *k_pages.shape[2:])
     v = jnp.take(v_pages, block_table, axis=0).reshape(
         B, PPS * ps, *v_pages.shape[2:])
-    return attn_mod.direct_attention(q, k, v, causal=False, kv_len=kv_len)
+    if q.shape[1] == 1:
+        return attn_mod.direct_attention(q, k, v, causal=False, kv_len=kv_len)
+    return attn_mod.windowed_decode_attention(q, k, v, kv_len)
 
 
 # ---------------------------------------------------------------------------
@@ -87,17 +97,21 @@ def _paged_attn_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                                # (H, dh)
+    q = q_ref[0]                                   # (W, H, dh)
     k = k_ref[0]                                   # (ps, K, dh)
     v = v_ref[0]
-    H, dh = q.shape
+    W, H, dh = q.shape
     K = k.shape[1]
     G = H // K
-    qs = q.reshape(K, G, dh).astype(jnp.float32) * (dh ** -0.5)
-    s = jnp.einsum("kgd,tkd->kgt", qs, k.astype(jnp.float32))
+    qs = q.reshape(W, K, G, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("wkgd,tkd->kgwt", qs, k.astype(jnp.float32))
     cols = p * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, 1, page_size), 2)
-    valid = cols < kvlen_ref[b]
+        jnp.int32, (1, 1, 1, page_size), 3)
+    # query row j of the window sees kv_len + j columns (causal inside the
+    # window, ragged across slots; W == 1 is the plain decode mask)
+    lim = kvlen_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, W, 1), 2)
+    valid = cols < lim
     s = jnp.where(valid, s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -107,19 +121,20 @@ def _paged_attn_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + pexp.sum(axis=-1)
     acc_ref[...] = (acc_ref[...] * corr[..., None]
-                    + jnp.einsum("kgt,tkd->kgd", pexp,
+                    + jnp.einsum("kgwt,tkd->kgwd", pexp,
                                  v.astype(jnp.float32)))
     m_ref[...] = m_new
 
     @pl.when(p == pl.num_programs(1) - 1)
     def _done():
         out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
-        o_ref[...] = out.reshape(1, 1, H, dh).astype(o_ref.dtype)
+        o_ref[...] = jnp.moveaxis(out, 2, 0).reshape(
+            1, W, H, dh).astype(o_ref.dtype)
 
 
 def paged_attention_pallas(q, k_pages, v_pages, block_table, kv_len, *,
                            interpret: bool = False):
-    B, _, H, dh = q.shape
+    B, W, H, dh = q.shape
     _, ps, K, _ = k_pages.shape
     PPS = block_table.shape[1]
     G = H // K
@@ -127,7 +142,7 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, kv_len, *,
         num_scalar_prefetch=2,                     # block_table, kv_len
         grid=(B, PPS),
         in_specs=[
-            pl.BlockSpec((1, 1, H, dh), lambda b, p, bt, kl: (b, 0, 0, 0)),
+            pl.BlockSpec((1, W, H, dh), lambda b, p, bt, kl: (b, 0, 0, 0)),
             # the gather: each (b, p) grid step pulls the ONE physical page
             # the block table names for slot b's logical page p
             pl.BlockSpec((1, ps, K, dh),
@@ -135,17 +150,17 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, kv_len, *,
             pl.BlockSpec((1, ps, K, dh),
                          lambda b, p, bt, kl: (bt[b, p], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, H, dh),
+        out_specs=pl.BlockSpec((1, W, H, dh),
                                lambda b, p, bt, kl: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((K, G), jnp.float32),       # running max
-            pltpu.VMEM((K, G), jnp.float32),       # running denom
-            pltpu.VMEM((K, G, dh), jnp.float32),   # running accumulator
+            pltpu.VMEM((K, G, W), jnp.float32),     # running max
+            pltpu.VMEM((K, G, W), jnp.float32),     # running denom
+            pltpu.VMEM((K, G, W, dh), jnp.float32),  # running accumulator
         ],
     )
     return pl.pallas_call(
         functools.partial(_paged_attn_kernel, page_size=ps),
-        out_shape=jax.ShapeDtypeStruct((B, 1, H, dh), v_pages.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, W, H, dh), v_pages.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
     )(block_table, kv_len, q, k_pages, v_pages)

@@ -16,7 +16,9 @@ its own budget and is recycled immediately, and the run prints per-request
 outputs plus serving metrics (TTFT, mean batch occupancy, tokens/s).
 `--trace-n` sets the number of replayed requests and `--arrival-every`
 their spacing on the decode-step clock; combine with `--bank-dir` to
-replay multi-tenant traffic with LRU residency handled at admission.
+replay multi-tenant traffic with LRU residency handled at admission, and
+with `--speculative [--drafter self|ngram] [--draft-k K]` to decode
+draft-then-verify (DESIGN.md §Speculation) and print acceptance metrics.
 
 Laptop-scale demo:
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
@@ -72,6 +74,15 @@ def main(argv=None):
                          "the default paged cache (DESIGN.md §Paging)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="--continuous: paged-cache page size (tokens)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="--continuous: draft-then-verify speculative "
+                         "decoding (DESIGN.md §Speculation); greedy outputs "
+                         "stay token-identical to the plain loop")
+    ap.add_argument("--drafter", default="self", choices=("self", "ngram"),
+                    help="--speculative: base-row self-drafter (reuses the "
+                         "bank's zero row) or host-side n-gram prompt lookup")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="--speculative: draft tokens per slot per step")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
@@ -132,10 +143,15 @@ def main(argv=None):
     if cfg.n_codebooks:
         prompts = [jnp.tile(p[:, None], (1, cfg.n_codebooks)) for p in prompts]
     if args.continuous:
-        from repro.serve import ContinuousScheduler
+        from repro.serve import ContinuousScheduler, NGramDrafter, SelfDrafter
         from repro.serve.engine import Request
+        drafter = None
+        if args.speculative:
+            drafter = (SelfDrafter(k=args.draft_k) if args.drafter == "self"
+                       else NGramDrafter(k=args.draft_k))
         sched = ContinuousScheduler(engine, paged=not args.dense_cache,
-                                    page_size=args.page_size)
+                                    page_size=args.page_size,
+                                    drafter=drafter)
         n = args.trace_n
         reqs = [Request(prompt=prompts[i % len(prompts)],
                         max_new=1 + (5 * i + 3) % args.max_new,
@@ -155,6 +171,12 @@ def main(argv=None):
               f"ttft {s['ttft_steps_mean']:.1f} steps (p90 "
               f"{s['ttft_steps_p90']:.1f}), "
               f"{s['tokens_per_s']:.0f} tok/s")
+        if "spec_accept_rate" in s:
+            print(f"speculative ({args.drafter}, k={args.draft_k}): "
+                  f"{s['spec_tokens_per_step']:.2f} tokens/step/slot, "
+                  f"accept rate {s['spec_accept_rate']:.2f}, "
+                  f"{s['spec_drafts_wasted']:.0f} drafts wasted over "
+                  f"{s['spec_slot_steps']:.0f} slot-steps")
         return
 
     ids = [tenant_ids[i % len(tenant_ids)] if tenant_ids else None

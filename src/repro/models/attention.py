@@ -57,6 +57,35 @@ def direct_attention(q, k, v, *, causal: bool = True,
     return out.reshape(B, Sq, H, dh)
 
 
+def windowed_decode_attention(q, k, v, kv_len) -> jax.Array:
+    """Multi-token decode attention for draft verification (DESIGN.md
+    §Speculation): q (B,W,H,dh) holds a short window of W consecutive
+    queries per slot — the last accepted token plus W-1 draft tokens — and
+    k/v (B,Skv,K,dh) is the cache AFTER the window's own KV rows were
+    written. `kv_len` (B,) is the valid length seen by query row 0 (its own
+    row included); row j additionally sees the j window rows before it:
+
+        query j attends columns  c < kv_len + j
+
+    which is exactly the mask a step-by-step decode would apply, so W == 1
+    reproduces `direct_attention(causal=False, kv_len=kv_len)` bit-for-bit
+    (same einsum structure, same mask arithmetic). Masked columns contribute
+    exact zeros at fp32; kv_len >= 1 guarantees no fully-masked row."""
+    B, W, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = dh ** -0.5
+    qs = q.reshape(B, W, K, G, dh) * scale
+    s = _gqa_scores(qs, k)                                   # (B,K,G,W,Skv)
+    kv_pos = jnp.arange(k.shape[1])
+    lim = (jnp.asarray(kv_len).reshape(B, 1, 1, 1, 1)
+           + jnp.arange(W).reshape(1, 1, 1, W, 1))
+    s = jnp.where(kv_pos[None, None, None, None, :] < lim, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(B, W, H, dh)
+
+
 def prefix_attention(q, k, v, kw, vw, prefix_len) -> jax.Array:
     """Tail-prefill attention for shared-prefix paged serving (DESIGN.md
     §Paging): `q`/`k`/`v` are the Sq tail rows of a prompt whose first

@@ -219,6 +219,22 @@ class Model:
                                      constrain=self.constrain,
                                      **self._bank_kwargs(params))
 
+    def verify_step(self, params: Dict, cache: Dict, batch: Dict):
+        """Speculative draft verification: one forward over batch["tokens"]
+        (B, W) — the last accepted token plus W-1 drafts per slot — writing
+        all W KV rows and returning the greedy continuation after each
+        (DESIGN.md §Speculation). Cache `pos` is NOT advanced; the
+        scheduler commits accepted counts via `advance_pos`."""
+        fn = self._slot_mod().verify_step
+        return fn(params["base"], params["peft"], cache, batch, self.cfg,
+                  self.peft, self.sites, constrain=self.constrain,
+                  **self._bank_kwargs(params))
+
+    def advance_pos(self, cache: Dict, delta):
+        """Per-slot position commit after verification (delta (B,) of
+        accepted token counts, or a scalar for drafter rollback)."""
+        return self._slot_mod().advance_pos(cache, delta)
+
     def prefill(self, params: Dict, cache: Dict, batch: Dict):
         """Fill a fresh cache from a whole (B, S[, CB]) prompt in one call.
         Transformer families run a parallel causal forward; recurrent

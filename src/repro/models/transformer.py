@@ -683,3 +683,117 @@ def decode_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
         next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (B,)
     new_cache = {kk: ck, vk: cv, "pos": pos + 1}
     return next_tokens, new_cache
+
+
+def advance_pos(cache: Dict, delta) -> Dict:
+    """Host-driven per-slot position update for speculative decoding
+    (DESIGN.md §Speculation): after a verify step the scheduler knows how
+    many window tokens each slot accepted and advances `pos` by that delta
+    (0 for retired slots); the drafter rolls its k probe steps back with a
+    scalar -k. Clamped at 0 so retired slots (pos == 0) can never go
+    negative and poison the scatter indices of the next step."""
+    pos = cache["pos"] + jnp.asarray(delta, jnp.int32)
+    return {**cache, "pos": jnp.maximum(pos, 0)}
+
+
+def verify_step(params: Dict, adapters: Dict, cache: Dict, batch: Dict,
+                cfg: ModelConfig, peft: PEFTConfig, sites,
+                constrain=None, bank=None,
+                bank_profiles=None) -> Tuple[jax.Array, Dict]:
+    """Draft verification: one batched forward over a short window of W
+    consecutive tokens per slot (DESIGN.md §Speculation). batch["tokens"]
+    (B, W) holds [last accepted token, draft_1 .. draft_{W-1}] per row;
+    row j sits at cache position pos + j. Returns (tokens (B, W), cache)
+    where tokens[:, j] is the greedy continuation after consuming window
+    token j — the scheduler accepts tokens[:, j] while draft_{j} ==
+    tokens[:, j-1] and then calls `advance_pos` with the per-slot count.
+
+    KV for ALL W window positions is written before attention (per layer),
+    so the windowed paged_attention mask (col < kv_len + j) gives each
+    query exactly the rows a step-by-step decode would see — greedy
+    verification is bit-identical (fp32) to W sequential `decode_step`
+    calls on the same drafts. `pos` is NOT advanced in-graph: acceptance is
+    a host decision, and rejected rows simply stay past kv_len as dirt that
+    the next window overwrites (rollback is bookkeeping, not data movement).
+
+    Write routing (paged): position pos + j maps through the block table;
+    entries past the slot's owned region default to its reserved scratch
+    page, and absolute overflow (>= PPS*ps) is routed there explicitly via
+    batch["scratch_pages"] (B,) — never clamped, so a deep slot's real rows
+    can't be collided with. Dense caches scatter with mode="drop"."""
+    x = _embed(params, cfg, batch)
+    B, W = x.shape[0], x.shape[1]
+    pos = cache["pos"]                              # (B,) per-slot
+    positions = (pos.astype(jnp.int32)[:, None]
+                 + jnp.arange(W, dtype=jnp.int32)[None, :])   # (B, W)
+    eff_layers, apps = apply_peft_to_layers(
+        params["layers"], adapters, sites, peft, constrain=constrain,
+        bank=bank, bank_profiles=bank_profiles,
+        bank_slots=batch.get("adapter_slots"))
+    linear = make_linear(apps, constrain)
+    paged = "pk" in cache
+    kv_len = pos + 1                                # row-0 validity
+    if paged:
+        from repro.kernels import paged_attention as paged_mod
+        op = kernel_api.resolve_op(
+            "paged_attention", paged_mod.OWNER, peft,
+            d1=cache["pk"].shape[2], d2=cfg.head_dim)
+        bt = batch["block_table"]                   # (B, PPS)
+        ps = cache["pk"].shape[2]
+        cap = bt.shape[1] * ps
+        scratch = batch.get("scratch_pages")
+        if scratch is None:
+            scratch = jnp.arange(B, dtype=jnp.int32)
+        else:
+            scratch = jnp.asarray(scratch, jnp.int32)
+        valid = positions < cap
+        safe = jnp.where(valid, positions, 0)
+        w_page = jnp.where(valid, jnp.take_along_axis(bt, safe // ps, axis=1),
+                           scratch[:, None])        # (B, W)
+        w_off = jnp.where(valid, safe % ps,
+                          jnp.arange(W, dtype=jnp.int32)[None, :] % ps)
+    else:
+        rows = jnp.arange(B)[:, None]               # (B, 1)
+    kk, vk = ("pk", "pv") if paged else ("k", "v")
+
+    def body(carry, lp_i):
+        x, ck_all, cv_all = carry
+        lp, li = lp_i
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = linear(lp, "wq", h).reshape(B, W, cfg.n_heads, cfg.head_dim)
+        k = linear(lp, "wk", h).reshape(B, W, cfg.n_kv, cfg.head_dim)
+        v = linear(lp, "wv", h).reshape(B, W, cfg.n_kv, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        if cfg.rope_theta:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+        ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
+        if paged:
+            # write-then-attend: all W rows land before the windowed mask
+            # reads them (no unique claims: overflow rows may collide inside
+            # the per-slot scratch page — dirt either way)
+            ck = ck.at[w_page, w_off].set(k.astype(ck.dtype),
+                                          mode="promise_in_bounds")
+            cv = cv.at[w_page, w_off].set(v.astype(cv.dtype),
+                                          mode="promise_in_bounds")
+            att = op.fn(q, ck, cv, bt, kv_len)
+        else:
+            ck = ck.at[rows, positions].set(k.astype(ck.dtype), mode="drop")
+            cv = cv.at[rows, positions].set(v.astype(cv.dtype), mode="drop")
+            att = attn_mod.windowed_decode_attention(q, ck, cv, kv_len)
+        x = x + linear(lp, "wo", att.reshape(B, W, cfg.attn_dim))
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, li, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, li, 0)
+        x, _ = _mlp_block(lp, x, cfg, linear, constrain)
+        return (x, ck_all, cv_all), None
+
+    (x, ck, cv), _ = jax.lax.scan(
+        body, (x, cache[kk], cache[vk]),
+        (eff_layers, jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, W)
+    return tokens, {kk: ck, vk: cv, "pos": pos}

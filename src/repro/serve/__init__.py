@@ -7,3 +7,4 @@ from repro.serve.paging import (
 from repro.serve.scheduler import (
     ContinuousScheduler, RequestQueue, ServingMetrics, SlotManager,
 )
+from repro.serve.spec import Drafter, NGramDrafter, SelfDrafter

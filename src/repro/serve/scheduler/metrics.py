@@ -38,6 +38,10 @@ class RequestMetrics:
                                        # the TTFT component arrival gaps
                                        # can't hide (shared-prefix reuse
                                        # shrinks exactly this)
+    drafted: int = 0                   # speculative: draft tokens offered
+    accepted: int = 0                  # speculative: draft tokens accepted
+                                       # (the mandatory verify token is
+                                       # free and not counted here)
 
     @property
     def ttft_steps(self) -> Optional[float]:
@@ -47,6 +51,14 @@ class RequestMetrics:
             return None
         return self.first_token - self.arrival
 
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Fraction of this request's draft tokens the verifier accepted
+        (None when it never went through a speculative step)."""
+        if self.drafted == 0:
+            return None
+        return self.accepted / self.drafted
+
 
 class ServingMetrics:
     def __init__(self):
@@ -55,6 +67,10 @@ class ServingMetrics:
         self.steps = 0
         self.wall_s = 0.0
         self._t0: Optional[float] = None
+        # speculative counters (DESIGN.md §Speculation): one sample per
+        # ACTIVE slot per verify step
+        self.spec_slot_steps = 0
+        self.accepted_hist: Dict[int, int] = {}  # emitted-per-step -> count
 
     # ---- lifecycle hooks (called by the runtime) --------------------------
     def start(self) -> None:
@@ -88,6 +104,17 @@ class ServingMetrics:
         self.steps += 1
         self.occupancy.append(active / slots)
 
+    def on_spec(self, rid: int, drafted: int, accepted: int,
+                emitted: int) -> None:
+        """One slot's outcome of one verify step: `drafted` tokens offered,
+        `accepted` of them kept, `emitted` tokens recorded (accepted + the
+        mandatory verify token, clamped by budget/EOS)."""
+        r = self.requests[rid]
+        r.drafted += drafted
+        r.accepted += accepted
+        self.spec_slot_steps += 1
+        self.accepted_hist[emitted] = self.accepted_hist.get(emitted, 0) + 1
+
     # ---- aggregates -------------------------------------------------------
     @property
     def total_tokens(self) -> int:
@@ -101,7 +128,7 @@ class ServingMetrics:
         occ = self.occupancy
         wall = self.wall_s if self._t0 is None \
             else self.wall_s + (time.perf_counter() - self._t0)
-        return {
+        out = {
             "n_requests": len(self.requests),
             "total_tokens": self.total_tokens,
             "steps": self.steps,
@@ -115,3 +142,14 @@ class ServingMetrics:
             "wall_s": wall,
             "tokens_per_s": self.total_tokens / wall if wall > 0 else 0.0,
         }
+        if self.spec_slot_steps:
+            drafted = sum(r.drafted for r in self.requests.values())
+            accepted = sum(r.accepted for r in self.requests.values())
+            emitted = sum(n * c for n, c in self.accepted_hist.items())
+            out.update({
+                "spec_slot_steps": float(self.spec_slot_steps),
+                "spec_accept_rate": accepted / drafted if drafted else 0.0,
+                "spec_tokens_per_step": emitted / self.spec_slot_steps,
+                "spec_drafts_wasted": float(drafted - accepted),
+            })
+        return out

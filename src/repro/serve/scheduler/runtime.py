@@ -27,6 +27,23 @@ Outputs are EXACT per request — bit-identical (fp32) to
 prompt at its true positions (`true_len` logits gather), pad-tail KV rows
 are never readable (per-slot kv_len), and every decode einsum is
 row-parallel.
+
+Two throughput paths sit on top of the plain per-step decode loop:
+
+- **Speculative decoding** (`drafter=`, DESIGN.md §Speculation): a
+  `serve.spec.Drafter` proposes k tokens per slot; ONE `verify_step`
+  forward (windowed paged_attention, q_len = k+1) scores all of them, the
+  host accepts the longest greedy-consistent prefix per slot (EOS and
+  budget clamp inside the window), and `advance_pos` commits per-slot
+  deltas — rejection is position bookkeeping, never data movement, and the
+  fixed (n_slots, k+1) verify shape never recompiles.
+- **Buffered EOS detection**: the plain loop no longer syncs on every
+  step's tokens. Decode feeds its own device output back as the next
+  step's input; emitted tokens buffer on device and drain in one transfer
+  when a budget completion is due (host-known, so budget-only traffic
+  keeps its exact step timing), when the async per-slot EOS done-flag
+  comes back set, or every `eos_sync_every` steps — so EOS-enabled decode
+  no longer blocks on a host round-trip each step.
 """
 from __future__ import annotations
 
@@ -59,8 +76,10 @@ class ContinuousScheduler:
     """Continuous-batching front end over an Engine's model/params/bank.
 
     eos_id:  optional stop token — a slot completes on emitting it (the
-             token is included in the output). Forces one host sync per
-             decode step; budget-only traffic stays async.
+             token is included in the output). Detected from the buffered
+             device-side done-flag (no per-step host round-trip); at most
+             `eos_sync_every` decode steps run past an EOS before the
+             drain discards the overshoot.
     policy:  RequestQueue admission order ("fcfs" | "resident_first").
     bucket:  pad prime prefills to pow2 prompt buckets (bounded compile
              count); False compiles per distinct prompt length instead.
@@ -70,6 +89,13 @@ class ContinuousScheduler:
     page_size / n_pages: paged-cache geometry (n_pages defaults to the
              zero-sharing worst case plus prefix-cache headroom, see
              serve/paging.PagedKVCache).
+    drafter: optional `serve.spec.Drafter` — switches the decode loop to
+             draft-then-verify speculative decoding (DESIGN.md
+             §Speculation). Greedy outputs stay token-identical to the
+             non-speculative path; `metrics` grows acceptance counters.
+    eos_sync_every: max decode steps between token drains when eos_id is
+             set and no completion is otherwise due (bounds both EOS
+             detection latency and wasted overshoot steps).
 
     Streaming API: `events()` yields ("admit", rid, slot, t),
     ("token", rid, token, t) and ("done", rid, tokens, t) tuples as they
@@ -81,7 +107,8 @@ class ContinuousScheduler:
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
                  policy: str = "fcfs", bucket: bool = True,
                  paged: bool = True, page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, drafter=None,
+                 eos_sync_every: int = 4):
         if not engine.model.supports_slot_cache:
             raise NotImplementedError(
                 f"{engine.model.cfg.name}: continuous batching needs the "
@@ -123,6 +150,27 @@ class ContinuousScheduler:
         self._last = [0] * self.n_slots        # per-slot last token (host)
         self._outs: Dict[int, List[int]] = {}
         self._stale = set()                    # freed, not yet reset slots
+        # buffered decode state (plain loop): device token feedback plus
+        # not-yet-drained step outputs and the async EOS done-flag
+        self.eos_sync_every = max(1, int(eos_sync_every))
+        self._pending: List[Tuple] = []        # (t, nt_dev, [(slot, sr)..])
+        self._toks_dev = None                  # (B, 1) next-step tokens
+        self._flag_dev = None                  # (B,) device done-flags
+        self._flag_prev = None                 # last flag snapshot in flight
+        if eos_id is not None:
+            eid = int(eos_id)
+            self._or_eos = jax.jit(lambda f, nt: f | (nt == eid))
+        # speculative decoding (DESIGN.md §Speculation)
+        self.drafter = drafter
+        if drafter is not None:
+            self._verify = jax.jit(self.model.verify_step)
+            drafter.bind(self)
+        self._advance = jax.jit(self.model.advance_pos,
+                                donate_argnums=(0,))
+        if paged:
+            # verify-window overflow writes route to the slot's reserved
+            # scratch page (paging.py: scratch page of slot i is page i)
+            self._scratch_pages = jnp.arange(self.n_slots, dtype=jnp.int32)
 
     # ---- submission -------------------------------------------------------
     def submit(self, request: Request, arrival: float = 0.0) -> int:
@@ -291,22 +339,33 @@ class ContinuousScheduler:
             tok = self._prime(sr, slot)
             self._outs[sr.rid] = [tok]
             self._last[slot] = tok
+            if self._toks_dev is not None:
+                # mid-buffer admission: in-flight slots' next tokens live
+                # only on device, so splice the new slot's first token in
+                # instead of rebuilding from the (stale) host view
+                self._toks_dev = self._toks_dev.at[slot, 0].set(tok)
+            if self.drafter is not None:
+                self.drafter.on_prime(slot, np.asarray(sr.request.prompt),
+                                      tok)
             self.metrics.on_token(sr.rid, self.t)
             yield ("admit", sr.rid, slot, self.t)
             yield ("token", sr.rid, tok, self.t)
             if self.slots.note_token(slot, tok):
                 yield self._finish(slot)
 
-    def _finish(self, slot: int) -> Event:
+    def _finish(self, slot: int, t: Optional[float] = None) -> Event:
+        t = self.t if t is None else t
         sr = self._sr[slot]
         self._sr[slot] = None
         self._last[slot] = 0
         self.slots.release(slot)
         self._stale.add(slot)          # reset is batched into the next step
+        if self.drafter is not None:
+            self.drafter.on_release(slot)
         toks = self._outs.pop(sr.rid)
         sr.request.out = toks
-        self.metrics.on_finish(sr.rid, self.t)
-        return ("done", sr.rid, toks, self.t)
+        self.metrics.on_finish(sr.rid, t)
+        return ("done", sr.rid, toks, t)
 
     # ---- decode -----------------------------------------------------------
     def _flush_stale(self) -> None:
@@ -319,9 +378,8 @@ class ContinuousScheduler:
             mask[list(stale)] = True
             self.cache = self._reset(self.cache, mask)
 
-    def _decode_once(self) -> Iterator[Event]:
-        self._flush_stale()
-        active = self.slots.active_slots()
+    def _batch_inputs(self) -> Tuple[Dict, Dict]:
+        """(params, extra) for a full-batch decode/verify dispatch."""
         params, extra = self.engine.params, {}
         if self.pager is not None:
             extra["block_table"] = self.pager.block_table_device()
@@ -329,21 +387,127 @@ class ContinuousScheduler:
             extra["adapter_slots"] = self.bank.slot_rows(
                 self.slots.adapter_ids(), self.n_slots)
             params = {**params, "bank": self.bank.params}
-        toks = jnp.asarray(np.asarray(self._last, np.int32)[:, None])
+        return params, extra
+
+    def _min_budget_left(self) -> int:
+        """Tokens until the EARLIEST budget completion among active slots,
+        counted from the last drain — once the buffer holds that many
+        steps, a completion is inside it and must be processed (so
+        budget-only traffic drains at exactly its completion steps and
+        keeps the unbuffered loop's scheduling timing)."""
+        budgets = [self.slots.state(s).budget
+                   for s in self.slots.active_slots()]
+        return min(budgets) if budgets else 0
+
+    def _decode_once(self) -> Iterator[Event]:
+        self._flush_stale()
+        active = self.slots.active_slots()
+        params, extra = self._batch_inputs()
+        if self._toks_dev is None:
+            self._toks_dev = jnp.asarray(
+                np.asarray(self._last, np.int32)[:, None])
         nt, self.cache = self._decode(params, self.cache,
-                                      {"tokens": toks, **extra})
+                                      {"tokens": self._toks_dev, **extra})
+        # feed the device output straight back as the next step's input —
+        # the host never sees tokens until a drain
+        self._toks_dev = nt[:, None]
         self.t += 1
         self.metrics.on_step(len(active), self.n_slots)
-        arr = np.asarray(nt)
+        self._pending.append((self.t, nt, [(s, self._sr[s]) for s in active]))
+        sync = self._min_budget_left() <= len(self._pending)
+        if self.eos_id is not None:
+            if self._flag_dev is None:
+                self._flag_dev = jnp.zeros((self.n_slots,), jnp.bool_)
+            self._flag_dev = self._or_eos(self._flag_dev, nt)
+            # the PREVIOUS flag snapshot has had a full decode dispatch to
+            # come back (copy_to_host_async below) — reading it now is
+            # effectively free, and one step of detection latency only
+            # delays the drain, never correctness
+            if self._flag_prev is not None \
+                    and bool(np.asarray(self._flag_prev).any()):
+                sync = True
+            self._flag_dev.copy_to_host_async()
+            self._flag_prev = self._flag_dev
+            if len(self._pending) >= self.eos_sync_every:
+                sync = True
+        if sync:
+            yield from self._drain()
+
+    def _drain(self) -> Iterator[Event]:
+        """Fetch every buffered step's tokens in ONE device transfer and
+        replay them through the per-token accounting, stamped with their
+        original step times. Slots that complete mid-buffer stop
+        contributing from that step on (their later buffered tokens — the
+        decode overshoot — are discarded, exactly what the unbuffered loop
+        never generated; the device rows were dirt past their kv_len)."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        self._flag_dev = None
+        self._flag_prev = None
+        arr = np.asarray(jnp.stack([nt for _, nt, _ in pending]))
+        for i, (t, _, occupants) in enumerate(pending):
+            for slot, sr in occupants:
+                if self._sr[slot] is not sr:   # finished at an earlier step
+                    continue
+                tok = int(arr[i, slot])
+                self._outs[sr.rid].append(tok)
+                self._last[slot] = tok
+                self.metrics.on_token(sr.rid, t)
+                yield ("token", sr.rid, tok, t)
+                if self.slots.note_token(slot, tok):
+                    yield self._finish(slot, t)
+
+    # ---- speculative decode (DESIGN.md §Speculation) ----------------------
+    def _spec_decode_once(self) -> Iterator[Event]:
+        """One draft-then-verify step: the drafter proposes k tokens per
+        slot, ONE `verify_step` forward scores the (n_slots, k+1) window,
+        and each active slot accepts the longest prefix greedy decoding
+        would have emitted — token j is kept iff draft j matched the
+        model's own output after token j-1, with EOS and budget clamping
+        anywhere inside the window. Accepted counts commit to the device
+        `pos` via `advance_pos` (0 for FREE slots); rejected rows stay
+        past kv_len as dirt the next window overwrites."""
+        self._flush_stale()
+        active = self.slots.active_slots()
+        params, extra = self._batch_inputs()
+        if self.pager is not None:
+            extra["scratch_pages"] = self._scratch_pages
+        k = self.drafter.k
+        drafts = np.asarray(self.drafter.propose(), np.int32)
+        win = np.zeros((self.n_slots, k + 1), np.int32)
+        win[:, 0] = self._last
+        win[:, 1:] = drafts
+        out, self.cache = self._verify(params, self.cache,
+                                       {"tokens": jnp.asarray(win), **extra})
+        self.t += 1
+        self.metrics.on_step(len(active), self.n_slots)
+        arr = np.asarray(out)
+        deltas = np.zeros((self.n_slots,), np.int32)
         for slot in active:
             sr = self._sr[slot]
-            tok = int(arr[slot])
-            self._outs[sr.rid].append(tok)
-            self._last[slot] = tok
-            self.metrics.on_token(sr.rid, self.t)
-            yield ("token", sr.rid, tok, self.t)
-            if self.slots.note_token(slot, tok):
+            # greedy acceptance: token j is valid iff draft j matched the
+            # model's own continuation after token j-1 (token 0 is the
+            # mandatory next token — always valid)
+            accepted = [int(arr[slot, 0])]
+            for j in range(1, k + 1):
+                if win[slot, j] != arr[slot, j - 1]:
+                    break
+                accepted.append(int(arr[slot, j]))
+            n_emit, done = self.slots.note_window(slot, accepted)
+            emitted = accepted[:n_emit]         # budget/EOS clamp
+            for tok in emitted:
+                self._outs[sr.rid].append(tok)
+                self._last[slot] = tok
+                self.metrics.on_token(sr.rid, self.t)
+                yield ("token", sr.rid, tok, self.t)
+            deltas[slot] = n_emit
+            self.drafter.on_tokens(slot, emitted)
+            self.metrics.on_spec(sr.rid, drafted=k, accepted=n_emit - 1,
+                                 emitted=n_emit)
+            if done:
                 yield self._finish(slot)
+        self.cache = self._advance(self.cache, jnp.asarray(deltas))
 
     # ---- main loop --------------------------------------------------------
     def events(self) -> Iterator[Event]:
@@ -365,7 +529,10 @@ class ContinuousScheduler:
                     raise RuntimeError(
                         "scheduler stalled: arrived requests cannot be "
                         "admitted although every slot is free")
-                yield from self._decode_once()
+                if self.drafter is not None:
+                    yield from self._spec_decode_once()
+                else:
+                    yield from self._decode_once()
         finally:
             self.metrics.stop()
 

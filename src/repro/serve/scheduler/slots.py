@@ -131,6 +131,22 @@ class SlotManager:
         return s.budget <= 0 or (self.eos_id is not None
                                  and token == self.eos_id)
 
+    def note_window(self, slot: int, tokens: List[int]) -> tuple:
+        """Record an ACCEPTED speculative window for `slot` (DESIGN.md
+        §Speculation): consume `tokens` in order, stopping the moment the
+        budget hits zero or a token is `eos_id` — the same per-token rule
+        `note_token` applies, so a verify step emitting [t1..tn] is
+        accounted exactly like n sequential decode steps. Returns
+        (n_emitted, done): the runtime must emit only the first n_emitted
+        tokens (the rest are clamped overshoot) and release the slot when
+        done."""
+        if not tokens:
+            raise ValueError("note_window needs at least one token")
+        for n, tok in enumerate(tokens, start=1):
+            if self.note_token(slot, tok):
+                return n, True
+        return len(tokens), False
+
     def release(self, slot: int) -> SlotState:
         """Recycle `slot` (ACTIVE -> FREE); returns the occupant's final
         state snapshot. Fires `on_release` after the transition."""

@@ -1,0 +1,154 @@
+"""Drafters for speculative decoding on the continuous runtime (DESIGN.md
+§Speculation).
+
+A drafter proposes `k` tokens per slot per scheduler step; the runtime
+verifies all of them (plus the mandatory next token) in ONE batched
+`verify_step` forward and accepts the longest prefix that greedy decoding
+would have produced — so speculative output is token-identical to the
+non-speculative path, and a step emits between 1 and k+1 tokens per slot.
+
+Two implementations:
+
+`SelfDrafter` — the adapter-free base model as its own drafter. The
+    `AdapterBank` already reserves a zero row every gather can hit
+    (FourierFT deltas are ADDED to the frozen base, so row `zero_row` IS
+    the base model): drafting runs k ordinary decode steps through the
+    SAME compiled per-slot decode graph with every slot's adapter gather
+    forced to the zero row — no extra weights, no extra compilation. The
+    draft diverges from the tenant model only where the spectral delta
+    changes the argmax, which is exactly why acceptance is high for
+    parameter-efficient adapters. Probe steps advance the cache `pos` by
+    k and write base-model KV at pos..pos+k-1; `propose` rolls `pos` back
+    (scalar `advance_pos(-k)`) and the verify forward overwrites every
+    probed row with tenant-model KV before anything can read it.
+
+`NGramDrafter` — prompt-lookup drafting, entirely host-side: each slot
+    keeps its token history (prompt + generated) and proposes the
+    continuation of the most recent PRIOR occurrence of the trailing
+    n-gram. Zero device cost per proposal; wins over self-drafting when
+    outputs quote their inputs (extraction, code edits) or when k probe
+    decode steps cost more than they save.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Drafter:
+    """Protocol + no-op history hooks. A drafter is bound to ONE scheduler
+    (`bind`), proposes an (n_slots, k) int32 token block per step
+    (`propose`; rows of FREE slots are ignored), and observes the slot
+    lifecycle through `on_prime` / `on_tokens` / `on_release`."""
+
+    k: int = 4
+
+    def bind(self, sched) -> None:
+        self._sched = sched
+
+    def propose(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def on_prime(self, slot: int, prompt: np.ndarray,
+                 first_token: int) -> None:
+        pass
+
+    def on_tokens(self, slot: int, tokens: List[int]) -> None:
+        pass
+
+    def on_release(self, slot: int) -> None:
+        pass
+
+
+class SelfDrafter(Drafter):
+    """Base-row self-drafting: k greedy decode steps with all adapter
+    gathers pointed at the bank's reserved zero row (== the frozen base
+    model). Reuses the scheduler's compiled decode graph; one host sync
+    per proposal (the stacked k tokens)."""
+
+    def __init__(self, k: int = 4):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+
+    def bind(self, sched) -> None:
+        super().bind(sched)
+        self._zero_slots = None
+
+    def propose(self) -> np.ndarray:
+        s = self._sched
+        params, extra = s.engine.params, {}
+        if s.pager is not None:
+            extra["block_table"] = s.pager.block_table_device()
+        if s.bank is not None:
+            if self._zero_slots is None:      # all-None ids -> zero rows
+                self._zero_slots = s.bank.slot_rows([None] * s.n_slots,
+                                                    s.n_slots)
+            extra["adapter_slots"] = self._zero_slots
+            params = {**params, "bank": s.bank.params}
+        cache = s.cache
+        toks = jnp.asarray(np.asarray(s._last, np.int32)[:, None])
+        outs = []
+        for _ in range(self.k):
+            nt, cache = s._decode(params, cache, {"tokens": toks, **extra})
+            outs.append(nt)
+            toks = nt[:, None]
+        # roll the probe steps back: pos is the only state that must not
+        # move (probe KV rows sit past kv_len until verify rewrites them)
+        s.cache = s._advance(cache, jnp.int32(-self.k))
+        return np.asarray(jnp.stack(outs, axis=1))
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafting: propose the continuation of the most recent
+    PRIOR occurrence of the trailing n-gram of each slot's history, trying
+    suffix lengths `ngram` down to 1, repeating the last token when the
+    match runs short (or no match exists — proposal quality only affects
+    acceptance, never correctness)."""
+
+    def __init__(self, k: int = 4, ngram: int = 3, max_history: int = 4096):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {ngram}")
+        self.k = k
+        self.ngram = ngram
+        self.max_history = max_history
+
+    def bind(self, sched) -> None:
+        super().bind(sched)
+        self._hist: Dict[int, List[int]] = {}
+
+    def on_prime(self, slot: int, prompt: np.ndarray,
+                 first_token: int) -> None:
+        self._hist[slot] = [int(t) for t in prompt] + [int(first_token)]
+
+    def on_tokens(self, slot: int, tokens: List[int]) -> None:
+        h = self._hist.get(slot)
+        if h is not None:
+            h.extend(tokens)
+            if len(h) > self.max_history:
+                del h[:len(h) - self.max_history]
+
+    def on_release(self, slot: int) -> None:
+        self._hist.pop(slot, None)
+
+    def _lookup(self, h: List[int]) -> List[int]:
+        for n in range(min(self.ngram, len(h) - 1), 0, -1):
+            pat = h[-n:]
+            # most recent PRIOR occurrence: continuation must predate the
+            # suffix itself (i + n < len(h))
+            for i in range(len(h) - n - 1, -1, -1):
+                if h[i:i + n] == pat:
+                    cont = h[i + n:i + n + self.k]
+                    return cont + [cont[-1]] * (self.k - len(cont))
+        return [h[-1]] * self.k
+
+    def propose(self) -> np.ndarray:
+        s = self._sched
+        out = np.zeros((s.n_slots, self.k), np.int32)
+        for slot, h in self._hist.items():
+            out[slot] = self._lookup(h)
+        return out

@@ -2,7 +2,10 @@
 every registered backend against the einsum reference, the einsum backend
 against the dense ragged decode attention under an identity block table,
 registry capability routing (interpret on any platform, pallas TPU-gated,
-auto -> einsum off-TPU), and kv_len edge cases."""
+auto -> einsum off-TPU), kv_len edge cases, and the MULTI-TOKEN verify
+window (DESIGN.md §Speculation): q_len in {1, 2, 5, 9} on every backend
+against a per-row single-query loop, with W == 1 bitwise-identical to the
+historical single-query semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,13 +17,16 @@ from repro.kernels import paged_attention as pa
 from repro.models import attention as attn_mod
 
 
-def _case(seed, B=3, H=8, K=2, dh=16, n_pages=14, ps=4, pps=6):
+def _case(seed, B=3, H=8, K=2, dh=16, n_pages=14, ps=4, pps=6, W=1):
     rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.normal(size=(B, 1, H, dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, W, H, dh)), jnp.float32)
     kp = jnp.asarray(rng.normal(size=(n_pages, ps, K, dh)), jnp.float32)
     vp = jnp.asarray(rng.normal(size=(n_pages, ps, K, dh)), jnp.float32)
     bt = jnp.asarray(rng.integers(0, n_pages, size=(B, pps)), jnp.int32)
-    kv_len = jnp.asarray(rng.integers(1, pps * ps + 1, size=(B,)), jnp.int32)
+    # ragged: row j of the window reads kv_len + j rows, so the deepest
+    # read (kv_len + W - 1) must stay inside the block-table window
+    kv_len = jnp.asarray(rng.integers(1, pps * ps - W + 2, size=(B,)),
+                         jnp.int32)
     return q, kp, vp, bt, kv_len
 
 
@@ -76,6 +82,70 @@ class TestConformance:
         np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
+class TestWindowedConformance:
+    """Multi-token verify window (DESIGN.md §Speculation): query row j
+    attends pool positions < kv_len + j. The ground truth is the ALREADY
+    PROVEN single-query op run once per row — the windowed op must be the
+    batched equivalent of that loop on every backend."""
+
+    @staticmethod
+    def _rowwise_reference(q, kp, vp, bt, kv_len):
+        W = q.shape[1]
+        rows = [pa.paged_attention_einsum(q[:, j:j + 1], kp, vp, bt,
+                                          kv_len + j)
+                for j in range(W)]
+        return jnp.concatenate(rows, axis=1)
+
+    @pytest.mark.parametrize("W", [1, 2, 5, 9])
+    def test_einsum_matches_rowwise_single_query(self, W):
+        q, kp, vp, bt, kv_len = _case(21 + W, W=W)
+        ref = self._rowwise_reference(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("W", [1, 2, 5, 9])
+    def test_interpret_matches_einsum(self, W):
+        q, kp, vp, bt, kv_len = _case(31 + W, W=W)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_w1_bitwise_identical_to_single_query(self):
+        """W == 1 is not merely close to the old semantics — the einsum
+        path must be the SAME computation (bitwise), so wiring verify
+        through the windowed op cannot perturb plain decode."""
+        q, kp, vp, bt, kv_len = _case(17)
+        single = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        ref = self._rowwise_reference(q, kp, vp, bt, kv_len)
+        np.testing.assert_array_equal(np.asarray(single), np.asarray(ref))
+
+    def test_ragged_kv_len_and_window_edges(self):
+        """Extremes: a slot one token past reset (kv_len=1) and a slot
+        whose window's deepest row reads the full block-table span."""
+        W = 5
+        q, kp, vp, bt, _ = _case(41, W=W)
+        pps, ps = bt.shape[1], kp.shape[1]
+        kv_len = jnp.asarray([1, pps * ps - W + 1, ps], jnp.int32)
+        ref = self._rowwise_reference(q, kp, vp, bt, kv_len)
+        for fn in (pa.paged_attention_einsum,
+                   lambda *a: pa.paged_attention_pallas(*a, interpret=True)):
+            out = fn(q, kp, vp, bt, kv_len)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+            assert not np.isnan(np.asarray(out)).any()
+
+    def test_windowed_mha_no_gqa_groups(self):
+        q, kp, vp, bt, kv_len = _case(43, H=4, K=4, W=3)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
 class TestRegistryRouting:
     def test_backends_registered(self):
         assert set(kernel_api.backends_for("paged_attention", pa.OWNER)) \
@@ -113,6 +183,14 @@ class TestRegistryRouting:
 class TestCompiledTPU:
     def test_pallas_matches_einsum(self):
         q, kp, vp, bt, kv_len = _case(0, dh=128, ps=8)
+        ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
+        out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-2, rtol=2e-2)
+
+    @pytest.mark.parametrize("W", [2, 5])
+    def test_pallas_windowed_matches_einsum(self, W):
+        q, kp, vp, bt, kv_len = _case(1, dh=128, ps=8, W=W)
         ref = pa.paged_attention_einsum(q, kp, vp, bt, kv_len)
         out = pa.paged_attention_pallas(q, kp, vp, bt, kv_len)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

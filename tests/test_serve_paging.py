@@ -20,8 +20,8 @@ from repro.core import adapter as adapter_api
 from repro.core import peft as peft_mod
 from repro.models import build
 from repro.serve import (
-    ContinuousScheduler, Engine, OutOfPagesError, PageAllocator,
-    PagedKVCache, PageError, Request,
+    ContinuousScheduler, Drafter, Engine, OutOfPagesError, PageAllocator,
+    PagedKVCache, PageError, Request, SelfDrafter,
 )
 from repro.serve.engine import AdapterBank
 
@@ -383,6 +383,105 @@ class TestPagedExactness:
         for r in reqs:
             assert r.out == _serial(eng, r)
         sched.pager.assert_no_leaks()
+
+
+class _ChaosDrafter(Drafter):
+    """Adversarial drafter: proposes seeded random garbage, so verify
+    rejects almost every draft — maximal rollback traffic, every window's
+    tail rows written then abandoned past kv_len. Correctness must not
+    depend on proposal quality."""
+
+    def __init__(self, k, seed):
+        self.k = k
+        self._rng = np.random.default_rng(seed)
+
+    def propose(self):
+        s = self._sched
+        return self._rng.integers(0, 64, size=(s.n_slots, self.k),
+                                  dtype=np.int32)
+
+
+class TestSpecRollback:
+    """DESIGN.md §Speculation rollback invariants on the PAGED cache:
+    speculation is position bookkeeping only — no page ever allocates,
+    frees, or mutates because of a rejected draft."""
+
+    def test_rejected_windows_exact_and_leak_free(self):
+        """Worst case (garbage drafter, ~everything rejected): outputs stay
+        bit-identical to serial and the allocator ends leak-free."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        sched = ContinuousScheduler(eng, page_size=8,
+                                    drafter=_ChaosDrafter(k=3, seed=0))
+        reqs = _trace([4, 7, 2, 5, 1, 6])
+        sched.serve(reqs, arrivals=[0, 0, 1, 2, 3, 5])
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        sched.pager.assert_no_leaks()
+
+    @pytest.mark.parametrize("k", [1, 4])
+    def test_fuzz_churn_under_speculation(self, k):
+        """Fuzz: random budgets/arrivals through the speculative runtime —
+        every request exact, allocator leak-free after every drain."""
+        rng = random.Random(17 + k)
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        sched = ContinuousScheduler(eng, page_size=8,
+                                    drafter=_ChaosDrafter(k=k, seed=k))
+        for _ in range(3):
+            n = rng.randint(2, 5)
+            reqs = _trace([rng.randint(1, 8) for _ in range(n)])
+            arrivals = sorted(rng.randint(0, 4) for _ in range(n))
+            sched.serve(reqs, arrivals=arrivals)
+            sched.pager.assert_no_leaks()
+            for r in reqs:
+                assert r.out == _serial(eng, r)
+
+    def test_shared_prefix_pages_survive_speculation(self):
+        """Refcounted shared-prefix pages are READ-ONLY to the verify
+        window: overflow rows route to the slot's reserved scratch page,
+        never onto a shared page. The shared pages' bytes must survive
+        speculative borrowers untouched (self-drafter probes included)."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        sched = ContinuousScheduler(eng, page_size=8,
+                                    drafter=SelfDrafter(k=3))
+        sys_p = list((np.arange(16) * 3 + 1) % 64)
+        cold = Request(prompt=jnp.array(sys_p + [2, 9], jnp.int32),
+                       max_new=4)
+        sched.serve([cold])
+        assert len(sched.pager.prefix_cache) == 2
+        shared_pages = list(sched.pager.prefix_cache.pages)
+        before = np.asarray(sched.cache["pk"][:, shared_pages])
+        tails = [[7], [13, 21, 3], []]       # [] => prompt == prefix: COW
+        reqs = [Request(prompt=jnp.array(sys_p + t, jnp.int32), max_new=6)
+                for t in tails]
+        sched.serve(reqs, arrivals=[0, 1, 2])
+        after = np.asarray(sched.cache["pk"][:, shared_pages])
+        np.testing.assert_array_equal(before, after)
+        for r in [cold] + reqs:
+            assert r.out == _serial(eng, r)
+        sched.pager.assert_no_leaks()
+
+    def test_speculation_never_touches_the_allocator(self):
+        """Property: the page-allocator op sequence is IDENTICAL with and
+        without a drafter — speculation introduces zero alloc/free calls."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=48)
+
+        def trace_ops(drafter):
+            sched = ContinuousScheduler(eng, page_size=8, drafter=drafter)
+            ops = []
+            alloc = sched.pager.allocator
+            real_alloc, real_free = alloc.alloc, alloc.free
+            alloc.alloc = lambda *a, **k: (ops.append("alloc"),
+                                           real_alloc(*a, **k))[1]
+            alloc.free = lambda *a, **k: (ops.append("free"),
+                                          real_free(*a, **k))[1]
+            sched.serve(_trace([5, 3, 6, 2]), arrivals=[0, 0, 2, 3])
+            return ops
+
+        assert trace_ops(None) == trace_ops(_ChaosDrafter(k=3, seed=5))
 
 
 class TestCapacityBoundary:
