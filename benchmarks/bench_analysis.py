@@ -1,0 +1,44 @@
+"""Static-analyzer bench: wall time + finding counts per pass.
+
+Times the three cheap analyzer passes (AST source lint over src/repro,
+kernel-capability verifier, sharding-coverage audit) and emits one row per
+pass plus a rollup, so analyzer latency and the finding trajectory are
+machine-diffable across PRs (BENCH_analysis.json next to BENCH_serve.json).
+The graph pass (trace + compile of the train/serve graphs) is exercised by
+the blocking `repro.analysis --all` CI gate instead — benching a full XLA
+compile here would dwarf every other row.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main():
+    import repro
+    from repro.analysis import ast_lint, kernel_audit, sharding_audit
+
+    pkg = os.path.dirname(os.path.abspath(repro.__file__))
+    ast_f, ast_us = _timed(
+        lambda: ast_lint.lint_paths([pkg], root=os.path.dirname(pkg)))
+    ker_f, ker_us = _timed(kernel_audit.run)
+    shd_f, shd_us = _timed(sharding_audit.run)
+
+    emit("analysis_ast", ast_us, f"findings={len(ast_f)}")
+    emit("analysis_kernels", ker_us, f"findings={len(ker_f)}")
+    emit("analysis_sharding", shd_us, f"findings={len(shd_f)}")
+    total = len(ast_f) + len(ker_f) + len(shd_f)
+    emit("analysis_static", ast_us + ker_us + shd_us,
+         f"findings={total};passes=3")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV. `python -m benchmarks.run [--only X]`.
 Serving rows (`serve_*`) are additionally written to ``BENCH_serve.json``
 at the repo root — tok/s, TTFT quantiles, speculative acceptance — so the
 serving perf trajectory is machine-diffable across PRs instead of living
-only in stdout.
+only in stdout. Analyzer rows (`analysis_*`: pass latency + finding
+counts) land in ``BENCH_analysis.json`` the same way.
 """
 import argparse
 import importlib
@@ -32,10 +33,12 @@ MODULES = [
     "benchmarks.bench_serve_scheduler",
     "benchmarks.bench_serve_paging",
     "benchmarks.bench_serve_spec",
+    "benchmarks.bench_analysis",
 ]
 
 SERVE_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_serve.json"
+ANALYSIS_JSON = SERVE_JSON.with_name("BENCH_analysis.json")
 
 
 def parse_row(row: str) -> tuple:
@@ -55,13 +58,13 @@ def parse_row(row: str) -> tuple:
     return name, rec
 
 
-def dump_serve_json(rows, path=SERVE_JSON) -> dict:
-    """Write every `serve_*` row as one JSON object keyed by row name
+def dump_prefix_json(rows, prefix, path) -> dict:
+    """Write every `<prefix>*` row as one JSON object keyed by row name
     (empty runs — e.g. `--only table1` — leave the previous file alone)."""
-    serve = dict(parse_row(r) for r in rows if r.startswith("serve"))
-    if serve:
-        path.write_text(json.dumps(serve, indent=2, sort_keys=True) + "\n")
-    return serve
+    picked = dict(parse_row(r) for r in rows if r.startswith(prefix))
+    if picked:
+        path.write_text(json.dumps(picked, indent=2, sort_keys=True) + "\n")
+    return picked
 
 
 def main() -> None:
@@ -81,8 +84,10 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)
-    if dump_serve_json(ROWS):
+    if dump_prefix_json(ROWS, "serve", SERVE_JSON):
         print(f"# serving rows -> {SERVE_JSON}", flush=True)
+    if dump_prefix_json(ROWS, "analysis", ANALYSIS_JSON):
+        print(f"# analysis rows -> {ANALYSIS_JSON}", flush=True)
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

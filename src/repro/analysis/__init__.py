@@ -1,0 +1,24 @@
+"""Static hot-path analyzer (DESIGN.md §Analysis).
+
+Four passes over the tree and its representative compiled graphs, one
+baseline-gated CLI (`python -m repro.analysis`):
+
+- `ast_lint`       — repo-specific Python source lint (tracer leaks,
+                     host syncs in loops, RNG inside jit)
+- `kernel_audit`   — KernelOp capability verifier (int32 phase bounds,
+                     VMEM budgets, paged-attention scratch shapes)
+- `sharding_audit` — every param leaf of every registered arch must
+                     resolve through a named sharding rule table
+- `hlo_lint`       — jaxpr/HLO lint of the train/serve graphs built by
+                     `graphs` (host transfers × loop multiplicity,
+                     f32-literal upcasts, wasted donations, recompile
+                     budgets)
+
+Findings diff against the committed `baseline.json`; only NEW findings
+fail the gate (report.gate). See DESIGN.md §Analysis for the rule catalog
+and the fix/suppress/baseline workflow.
+"""
+from repro.analysis.report import (              # noqa: F401
+    DEFAULT_BASELINE, Finding, diff, gate, load_baseline, render,
+    save_baseline, to_json,
+)

@@ -1,0 +1,86 @@
+"""CLI for the static analyzer: `python -m repro.analysis [--all|passes]`.
+
+Exit code 0 iff every finding is in the committed baseline (report.gate);
+CI runs `--all --json analysis-report.json` as a blocking step. The AST
+pass is pure source analysis (fast); `--graphs` traces/compiles the tiny
+train/serve graphs (seconds on CPU); `--kernels`/`--sharding` sit in
+between. `--update-baseline` rewrites the baseline from the current
+findings, keeping existing justifications.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis import report
+from repro.analysis.report import Finding
+
+
+def _ast_findings(paths: List[str]) -> List[Finding]:
+    from repro.analysis import ast_lint
+    if not paths:
+        import repro
+        pkg = os.path.dirname(os.path.abspath(repro.__file__))
+        return ast_lint.lint_paths([pkg], root=os.path.dirname(pkg))
+    return ast_lint.lint_paths(paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="static hot-path analyzer (DESIGN.md §Analysis)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none selected)")
+    ap.add_argument("--ast", action="store_true",
+                    help="Python source lint over src/repro (or PATHS)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="kernel capability verifier")
+    ap.add_argument("--sharding", action="store_true",
+                    help="sharding-coverage audit")
+    ap.add_argument("--graphs", action="store_true",
+                    help="jaxpr/HLO lint of the train/serve graphs")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the machine-readable report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help=f"baseline file (default {report.DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(keeps existing justifications) and exit 0")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs for the AST pass (default: src/repro)")
+    args = ap.parse_args(argv)
+
+    chosen = args.ast or args.kernels or args.sharding or args.graphs
+    run_all = args.all or not chosen
+    findings: List[Finding] = []
+    if run_all or args.ast:
+        findings += _ast_findings(args.paths)
+    if run_all or args.kernels:
+        from repro.analysis import kernel_audit
+        findings += kernel_audit.run()
+    if run_all or args.sharding:
+        from repro.analysis import sharding_audit
+        findings += sharding_audit.run()
+    if run_all or args.graphs:
+        from repro.analysis import graphs
+        findings += graphs.run()
+
+    baseline = report.load_baseline(args.baseline)
+    if args.update_baseline:
+        report.save_baseline(findings, args.baseline, old=baseline)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{args.baseline or report.DEFAULT_BASELINE}")
+        return 0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_json(findings, baseline), f, indent=2)
+            f.write("\n")
+    print(report.render(findings, baseline))
+    return report.gate(findings, baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

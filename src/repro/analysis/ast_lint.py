@@ -1,0 +1,282 @@
+"""Repo-specific Python AST lint (DESIGN.md §Analysis).
+
+Rules (finding rule ids in parens):
+
+- tracer-bool    — a Python truthiness/`int()`/`float()`/`bool()` coercion
+                   of a DEVICE VALUE inside a traced function. `if x:` on a
+                   tracer raises `ConcretizationTypeError` at trace time at
+                   best; at worst (shape-dependent code that happens to run
+                   under `eval_shape` only) it ships. Traced scope is
+                   detected statically: functions decorated with
+                   `jax.jit`/`functools.partial(jax.jit, …)`, functions
+                   passed to `jax.jit`/`jax.lax.scan`/`while_loop`/
+                   `fori_loop`/`cond`/`switch`/`vmap`/`grad`/
+                   `value_and_grad`/`checkpoint`/`custom_vjp`, and anything
+                   nested inside one.
+- host-sync      — `np.asarray`/`np.array`/`jax.device_get`/`int`/`float`/
+                   `bool` applied to a device expression ANYWHERE: a
+                   device→host transfer point. Intended drain points carry
+                   a `# repro: allow(host-sync)` suppression; everything
+                   else is a candidate per-step stall.
+- host-sync-in-loop — the same pattern lexically inside a `for`/`while`
+                   body: the per-step round-trip that serialized the old
+                   `SelfDrafter.propose` (serve/spec.py) — one transfer per
+                   probe step instead of one per proposal.
+- rng-in-jit     — `jax.random.PRNGKey(...)` inside a traced function: the
+                   key is re-derived inside every call's graph, so "random"
+                   is the same constant every step. Keys belong outside the
+                   jit boundary, threaded in as arguments.
+
+A "device expression" is (a) any call whose dotted callee starts with
+`jnp.` / `jax.numpy.` / `jax.lax.` / `jax.nn.` / `jax.random.`, or (b) a
+local name whose latest assignment was such a call (one hop — documented
+limitation; the jaxpr/HLO pass owns whole-graph guarantees).
+
+Suppressions: `# repro: allow(rule[, rule…])` on the finding's line or the
+line directly above suppresses those rules for that line only.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.report import Finding
+
+RULES = ("tracer-bool", "host-sync", "host-sync-in-loop", "rng-in-jit")
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
+
+# dotted-callee prefixes that produce device values
+_DEVICE_PREFIXES = ("jnp.", "jax.numpy.", "jax.lax.", "jax.nn.",
+                    "jax.random.")
+# callees that force a device->host transfer of their argument
+_SYNC_CALLEES = {"np.asarray", "np.array", "jax.device_get", "int", "float",
+                 "bool"}
+# tracing combinators: a function/lambda passed as any argument is traced
+_TRACING_CALLEES = {
+    "jax.jit", "jit", "jax.lax.scan", "jax.lax.while_loop",
+    "jax.lax.fori_loop", "jax.lax.cond", "jax.lax.switch", "jax.vmap",
+    "jax.grad", "jax.value_and_grad", "jax.checkpoint", "jax.custom_vjp",
+    "jax.custom_jvp", "lax.scan", "lax.while_loop", "lax.fori_loop",
+    "lax.cond", "lax.switch",
+}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.stack' for Attribute chains, 'int' for bare Names."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_device_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func)
+    return bool(name) and name.startswith(_DEVICE_PREFIXES)
+
+
+def _contains_device_expr(node: ast.AST, device_names: Set[str]) -> bool:
+    for sub in ast.walk(node):
+        if _is_device_call(sub):
+            return True
+        if isinstance(sub, ast.Name) and sub.id in device_names:
+            return True
+    return False
+
+
+def _allow_lines(src: str) -> Dict[int, Set[str]]:
+    """{line number: {allowed rules}} from `# repro: allow(...)` comments."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _decorated_traced(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        name = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+        if name in ("jax.jit", "jit", "functools.partial"):
+            if name == "functools.partial" and isinstance(dec, ast.Call):
+                inner = _dotted(dec.args[0]) if dec.args else None
+                if inner not in ("jax.jit", "jit"):
+                    continue
+            return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, filename: str, allow: Dict[int, Set[str]]):
+        self.filename = filename
+        self.allow = allow
+        self.findings: List[Finding] = []
+        self.traced_depth = 0
+        self.loop_depth = 0
+        # names whose latest assignment was a device-producing call; scoped
+        # per function (saved/restored around def visits)
+        self.device_names: Set[str] = set()
+        # function defs passed to tracing combinators (collected in a first
+        # pass over each module so `def body(...)` + `lax.scan(body, …)`
+        # marks `body` traced regardless of statement order)
+        self.traced_defs: Set[ast.AST] = set()
+
+    # ---- reporting --------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        for probe in (line, line - 1):
+            if rule in self.allow.get(probe, ()):  # inline suppression
+                return
+        self.findings.append(Finding(
+            "ast", rule, f"{self.filename}:{line}", message))
+
+    # ---- traced-scope bookkeeping ----------------------------------------
+    def _collect_traced_defs(self, tree: ast.AST) -> None:
+        """Names passed to tracing combinators anywhere in this module."""
+        traced_names: Set[str] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if callee not in _TRACING_CALLEES:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                name = _dotted(arg)
+                if name and "." not in name:
+                    traced_names.add(name)
+                if isinstance(arg, ast.Lambda):
+                    self.traced_defs.add(arg)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in traced_names:
+                self.traced_defs.add(node)
+
+    def lint(self, tree: ast.AST) -> List[Finding]:
+        self._collect_traced_defs(tree)
+        self.visit(tree)
+        return self.findings
+
+    # ---- visitors ---------------------------------------------------------
+    def _visit_fn(self, node) -> None:
+        traced = (self.traced_depth > 0 or node in self.traced_defs
+                  or _decorated_traced(node))
+        saved_names, self.device_names = self.device_names, set()
+        saved_loop, self.loop_depth = self.loop_depth, 0
+        self.traced_depth += 1 if traced else 0
+        self.generic_visit(node)
+        self.traced_depth -= 1 if traced else 0
+        self.device_names = saved_names
+        self.loop_depth = saved_loop
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        traced = self.traced_depth > 0 or node in self.traced_defs
+        self.traced_depth += 1 if traced else 0
+        self.generic_visit(node)
+        self.traced_depth -= 1 if traced else 0
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # bare names only (recursing through tuple/list unpacking) — an
+        # attribute target like `self.x = jnp.f(...)` must NOT mark `self`
+        names: List[ast.Name] = []
+
+        def collect(t):
+            if isinstance(t, ast.Name):
+                names.append(t)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for e in t.elts:
+                    collect(e)
+        for tgt in node.targets:
+            collect(tgt)
+        if _is_device_call(node.value):
+            for name in names:
+                self.device_names.add(name.id)
+        else:
+            for name in names:
+                self.device_names.discard(name.id)
+        self.generic_visit(node)
+
+    def _loop(self, node) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _loop
+    visit_While = _loop
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_truthiness(node.test)
+        self.generic_visit(node)
+
+    def _check_truthiness(self, test: ast.AST) -> None:
+        if self.traced_depth <= 0:
+            return
+        if _is_device_call(test) or (isinstance(test, ast.Name)
+                                     and test.id in self.device_names):
+            self._emit("tracer-bool", test,
+                       "Python truthiness on a traced value — use "
+                       "jnp.where / lax.cond, or hoist out of the jit")
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _dotted(node.func)
+        if callee == "jax.random.PRNGKey" and self.traced_depth > 0:
+            self._emit("rng-in-jit", node,
+                       "PRNGKey built inside a traced function — the key "
+                       "is a graph constant; thread it in as an argument")
+        if callee in _SYNC_CALLEES and node.args:
+            arg = node.args[0]
+            if _contains_device_expr(arg, self.device_names):
+                if callee in ("int", "float", "bool") \
+                        and self.traced_depth > 0:
+                    self._emit("tracer-bool", node,
+                               f"{callee}() on a traced value inside a "
+                               "traced function")
+                elif self.loop_depth > 0:
+                    self._emit("host-sync-in-loop", node,
+                               f"{callee}(...) forces a device→host "
+                               "transfer on every loop iteration — "
+                               "accumulate on device, drain once")
+                else:
+                    self._emit("host-sync", node,
+                               f"{callee}(...) on a device expression is a "
+                               "device→host sync point")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, filename: str = "<string>") -> List[Finding]:
+    tree = ast.parse(src, filename=filename)
+    return _Linter(filename, _allow_lines(src)).lint(tree)
+
+
+def lint_file(path: str, root: Optional[str] = None) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    rel = os.path.relpath(path, root) if root else path
+    return lint_source(src, rel)
+
+
+def lint_paths(paths: Iterable[str],
+               root: Optional[str] = None) -> List[Finding]:
+    """Lint every .py under the given files/directories (sorted, stable)."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _, names in os.walk(p):
+                files += [os.path.join(dirpath, n) for n in names
+                          if n.endswith(".py")]
+        elif p.endswith(".py"):
+            files.append(p)
+    out: List[Finding] = []
+    for f in sorted(files):
+        out += lint_file(f, root=root)
+    return out

@@ -1,0 +1,115 @@
+"""Representative compiled graphs for the analyzer (DESIGN.md §Analysis).
+
+The jaxpr/HLO pass needs actual graphs to lint. This module builds the two
+hot paths the repo ships — the train step and the continuous-batching
+serve loop — at reduced scale (2 layers, width 64, vocab 64: the same
+tiny-model recipe the test suite uses; seconds on CPU) and feeds them
+through hlo_lint:
+
+- **train_step**: lowered + compiled with the real mesh shardings and
+  donated state (train/step.make_sharded_train_step), checked for host
+  transfers, f32-literal upcasts (the graph is bf16 by default — exactly
+  where a stray np.float32 constant hurts), and wasted donations.
+- **serve**: a micro traffic replay through ContinuousScheduler (paged,
+  plus a SelfDrafter variant), checked against the scheduler's own
+  `expected_compile_bounds()` recompile contract, and the decode graph's
+  HLO/jaxpr linted for host transfers and callbacks — the decode loop is
+  where one stray sync costs a stall PER TOKEN.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.analysis import hlo_lint
+from repro.analysis.report import Finding
+
+
+def _tiny_train_model():
+    import repro.configs as C
+    from repro.configs.base import PEFTConfig
+    from repro.models import registry
+    cfg = C.reduced(C.get("yi-6b")).replace(vocab=64)
+    return registry.build(cfg, PEFTConfig(method="fourierft", n=16,
+                                          alpha=10.0))
+
+
+def _tiny_serve_model():
+    import repro.configs as C
+    from repro.configs.base import PEFTConfig
+    from repro.models import registry
+    # f32 like the serving tests: bit-exactness there pins this recipe
+    cfg = C.reduced(C.get("yi-6b")).replace(vocab=64, dtype="float32",
+                                            param_dtype="float32")
+    return registry.build(cfg, PEFTConfig(method="none"))
+
+
+def train_findings() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.configs.base import TrainConfig
+    from repro.train import step as ts
+    model = _tiny_train_model()
+    tcfg = TrainConfig(total_steps=4)
+    state, frozen = ts.init_state(model, tcfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    out: List[Finding] = []
+    jaxpr = jax.make_jaxpr(ts.make_train_step(model, tcfg))(state, frozen,
+                                                            batch)
+    out += hlo_lint.lint_jaxpr(jaxpr, "train_step")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    state, frozen, st_sh, fr_sh = ts.shard_train_state(model, state, frozen,
+                                                       mesh, fsdp=False)
+    jitted, b_sh = ts.make_sharded_train_step(model, tcfg, mesh, state,
+                                              frozen, batch,
+                                              shardings=(st_sh, fr_sh))
+    batch = jax.device_put(batch, b_sh)
+    txt = jitted.lower(state, frozen, batch).compile().as_text()
+    out += hlo_lint.lint_hlo_text(txt, "train_step")
+    n_donated = len(jax.tree_util.tree_leaves(state))
+    out += hlo_lint.donation_findings(txt, "train_step", n_donated)
+    return out
+
+
+def serve_findings() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ContinuousScheduler, Engine, Request, SelfDrafter
+    model = _tiny_serve_model()
+    params = model.init(jax.random.PRNGKey(0))
+    out: List[Finding] = []
+
+    def trace(budgets):
+        return [Request(prompt=jnp.asarray([(3 * i + j) % 64
+                                            for j in range(3 + i)],
+                                           jnp.int32), max_new=b)
+                for i, b in enumerate(budgets)]
+
+    eng = Engine(model, params, batch_slots=2, max_len=32)
+    sched = ContinuousScheduler(eng, page_size=8)
+    sched.serve(trace([3, 2, 4]))
+    out += hlo_lint.scheduler_recompile_findings(sched, "serve/paged")
+
+    # the decode step exactly as the scheduler dispatches it
+    batch = {"tokens": jnp.zeros((2, 1), jnp.int32),
+             "block_table": sched.pager.block_table_device()}
+    out += hlo_lint.lint_jaxpr(
+        jax.make_jaxpr(model.decode_step)(eng.params, sched.cache, batch),
+        "serve/decode")
+    txt = eng._decode.lower(eng.params, sched.cache,
+                            batch).compile().as_text()
+    out += hlo_lint.lint_hlo_text(txt, "serve/decode")
+
+    eng2 = Engine(model, params, batch_slots=2, max_len=32)
+    sched2 = ContinuousScheduler(eng2, page_size=8, drafter=SelfDrafter(k=2))
+    sched2.serve(trace([4, 3]))
+    out += hlo_lint.scheduler_recompile_findings(sched2, "serve/spec")
+    return out
+
+
+def run() -> List[Finding]:
+    return train_findings() + serve_findings()

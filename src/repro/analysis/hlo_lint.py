@@ -1,0 +1,190 @@
+"""Jaxpr/HLO lint (DESIGN.md §Analysis).
+
+Graph-level checks over what ACTUALLY lowered, complementing the source
+lint in ast_lint.py (which sees intent, not the compiled artifact):
+
+- **host transfers** (`host-transfer`, `host-transfer-in-loop`): infeed/
+  outfeed/send/recv opcodes and host-callback custom-calls in optimized
+  HLO, weighted by call-graph multiplicity via `dist.hlo.iter_instrs` — a
+  callback inside a while body at trip count 1024 is 1024 stalls per step,
+  which is the difference the `in_loop` variant exists to surface.
+- **callbacks in jaxprs** (`callback`, `callback-in-loop`): io_callback/
+  pure_callback/debug_callback primitives, caught at the jaxpr level too
+  because jaxprs keep source provenance the optimized HLO loses.
+- **fp32-literal upcasts** (`upcast-f32-literal`): a binary arithmetic eqn
+  combining an f32 scalar literal with a value converted UP from bf16/f16
+  — the classic `x * np.float32(c)` that silently drags a reduced-
+  precision graph into f32 (a weak Python float stays bf16 and never
+  trips this; only direct convert outputs are matched, so downstream
+  ops of an intentional f32 accumulation region don't flood the report).
+- **donation** (`donation-miss`): a module compiled with donated inputs
+  whose `input_output_alias` header aliases fewer entry params than were
+  donated. XLA silently drops unusable donations — the buffer stays live
+  and peak memory is one full copy higher than the code claims.
+- **recompiles** (`recompile-budget`): a jitted callable's signature count
+  (`_cache_size()`) exceeding its declared bound — the static replacement
+  for the old probe in tests/test_serve_paging.py, backed by the
+  scheduler's own `expected_compile_bounds()` contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+from repro.analysis.report import Finding
+from repro.dist import hlo
+
+_TRANSFER_OPCODES = {"infeed", "outfeed", "send", "recv"}
+_HOST_TARGET_MARKS = ("callback", "host", "infeed", "outfeed")
+_CALLBACK_PRIMS = ("callback",)            # io_/pure_/debug_callback
+_LOOP_PRIMS = {"while", "scan"}
+_BINARY_ARITH = {"add", "sub", "mul", "div", "max", "min"}
+_SMALL_FLOATS = ("bfloat16", "float16")
+
+
+# ---------------------------------------------------------------------------
+# HLO text
+# ---------------------------------------------------------------------------
+
+def lint_hlo_text(txt: str, label: str) -> List[Finding]:
+    """Host-transfer findings over optimized HLO (`compiled.as_text()`).
+    Findings aggregate per (opcode-or-target, in_loop) so baseline keys stay
+    stable across recompiles; `mult` carries total per-call executions."""
+    comps, entry = hlo.parse_module(txt)
+    agg: Dict[tuple, float] = {}
+    for ins, mult, in_loop in hlo.iter_instrs(comps, entry):
+        what = None
+        base = ins.opcode[:-5] if ins.opcode.endswith("-done") else ins.opcode
+        base = base[:-6] if base.endswith("-start") else base
+        if base in _TRANSFER_OPCODES:
+            what = base
+        elif ins.opcode == "custom-call":
+            target = hlo.custom_call_target(ins) or ""
+            if any(m in target for m in _HOST_TARGET_MARKS):
+                what = target
+        if what is not None:
+            agg[(what, in_loop)] = agg.get((what, in_loop), 0.0) + mult
+    out: List[Finding] = []
+    for (what, in_loop), mult in sorted(agg.items()):
+        rule = "host-transfer-in-loop" if in_loop else "host-transfer"
+        detail = ("inside a compiled loop body — it stalls every iteration"
+                  if in_loop else "a device→host round-trip per call")
+        out.append(Finding("hlo", rule, f"{label}/{what}",
+                           f"host transfer '{what}' in the compiled module: "
+                           f"{detail}", mult=mult))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jaxprs
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(params):
+    for v in params.values():
+        for cand in (v if isinstance(v, (list, tuple)) else (v,)):
+            inner = getattr(cand, "jaxpr", cand)
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val") and not hasattr(v, "count")
+
+
+def lint_jaxpr(jaxpr, label: str) -> List[Finding]:
+    """Callback + upcast findings over a (closed) jaxpr. Findings aggregate
+    per (rule, primitive, in_loop); `mult` counts occurrences (jaxprs carry
+    no trip counts — the HLO pass owns multiplicity)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    agg: Dict[tuple, float] = {}
+
+    def rec(jx, in_loop: bool) -> None:
+        upcast = set()                    # outvars of small-float → f32 converts
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            if any(mark in prim for mark in _CALLBACK_PRIMS):
+                key = ("callback-in-loop" if in_loop else "callback", prim)
+                agg[key] = agg.get(key, 0.0) + 1
+            if prim == "convert_element_type":
+                v = eqn.invars[0]
+                src = getattr(getattr(v, "aval", None), "dtype", None)
+                dst = getattr(getattr(eqn.outvars[0], "aval", None),
+                              "dtype", None)
+                if str(src) in _SMALL_FLOATS and str(dst) == "float32":
+                    upcast.add(eqn.outvars[0])
+            if prim in _BINARY_ARITH and len(eqn.invars) == 2:
+                a, b = eqn.invars
+                for lit, other in ((a, b), (b, a)):
+                    if (_is_literal(lit)
+                            and str(getattr(lit.aval, "dtype", "")) == "float32"
+                            and not getattr(lit.aval, "shape", ())
+                            and not _is_literal(other)
+                            and other in upcast):
+                        key = ("upcast-f32-literal", prim)
+                        agg[key] = agg.get(key, 0.0) + 1
+            for sub in _sub_jaxprs(eqn.params):
+                rec(sub, in_loop or prim in _LOOP_PRIMS)
+
+    rec(jaxpr, False)
+    out: List[Finding] = []
+    for (rule, prim), mult in sorted(agg.items()):
+        msg = {
+            "callback": f"'{prim}' primitive in the traced graph — a host "
+                        "round-trip baked into the compiled step",
+            "callback-in-loop": f"'{prim}' inside a scan/while body — a host "
+                                "stall on every loop iteration",
+            "upcast-f32-literal": "f32 scalar literal combined with a value "
+                                  "upcast from bf16/f16 — this op runs in "
+                                  "f32; cast the constant down (or keep it "
+                                  "a weak Python float), or baseline if "
+                                  "the f32 region is deliberate",
+        }[rule]
+        out.append(Finding("hlo", rule, f"{label}/{prim}", msg, mult=mult))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation / recompiles
+# ---------------------------------------------------------------------------
+
+def donation_findings(txt: str, label: str, n_donated: int) -> List[Finding]:
+    """Compare a compiled module's `input_output_alias` header against how
+    many flat inputs the call site donated. Fewer aliased params than
+    donated means XLA dropped donations as unusable."""
+    aliased = hlo.aliased_params(txt)
+    if n_donated and len(aliased) < n_donated:
+        return [Finding(
+            "hlo", "donation-miss", label,
+            f"{n_donated} inputs donated but only {len(aliased)} aliased in "
+            "input_output_alias — the rest stay live (wasted donation; "
+            "check dtype/shape/sharding match between donated input and "
+            "output)")]
+    return []
+
+
+def signature_count(jitfn) -> int:
+    """Number of compiled signatures a jitted callable holds."""
+    return int(jitfn._cache_size())
+
+
+def recompile_findings(counts: Mapping[str, int],
+                       bounds: Mapping[str, int],
+                       label: str) -> List[Finding]:
+    """Flag every compiled graph whose signature count exceeds its declared
+    bound (see ContinuousScheduler.expected_compile_bounds)."""
+    out: List[Finding] = []
+    for name in sorted(counts):
+        bound = bounds.get(name)
+        if bound is not None and counts[name] > bound:
+            out.append(Finding(
+                "hlo", "recompile-budget", f"{label}/{name}",
+                f"{counts[name]} compiled signatures for '{name}' exceeds "
+                f"the declared bound {bound} — a shape leaked past the pow2 "
+                "bucketing (serve/scheduler/runtime.py _bucket)"))
+    return out
+
+
+def scheduler_recompile_findings(sched, label: str = "serve") -> List[Finding]:
+    """Recompile audit of a live ContinuousScheduler after it has served
+    traffic: actual signature counts vs its own declared bounds."""
+    return recompile_findings(sched.compiled_signatures(),
+                              sched.expected_compile_bounds(), label)

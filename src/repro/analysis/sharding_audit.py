@@ -1,0 +1,72 @@
+"""Sharding-coverage audit (DESIGN.md §Analysis).
+
+`dist/sharding.py` places parameters by LEAF NAME, and any name matching no
+rule table silently replicates. That fall-through is how the mamba2/hybrid
+families initially shipped with undecided placements: the engine never
+errored, it just replicated whatever it didn't recognize. This pass makes
+the decision explicit — it walks `init_shapes()` (eval_shape; nothing
+materializes) for every registered arch × a representative set of adapter
+methods and flags every leaf whose `sharding.rule_kind` is None, i.e. a
+parameter nobody placed. The fix is always to add the leaf name to one of
+the four tables in dist/sharding.py (`_COLUMN`/`_ROW`/`_EXPERT`/
+`_REPLICATE`), making replication a decision instead of an accident.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.analysis.report import Finding
+
+# one method per distinct adapter-param leaf set: fourier/dct share "c"
+# (+ spectral aux), lora has lora_a/lora_b, circulant has kernel+b1/b2,
+# bitfit has delta_b — together they exercise every adapter leaf name.
+DEFAULT_METHODS = ("fourierft", "dct", "lora", "circulant", "bitfit")
+
+
+def _iter_leaves(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_leaves(v, path + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_leaves(v, path + (str(i),))
+    else:
+        yield "/".join(path), tuple(getattr(tree, "shape", ()))
+
+
+def audit_tree(tree, label: str) -> List[Finding]:
+    """Flag every leaf of a param(-shape) tree that resolves through the
+    silent replicate fall-through instead of a named rule table."""
+    from repro.dist import sharding
+    out: List[Finding] = []
+    seen = set()
+    for path, shape in _iter_leaves(tree):
+        name = path.split("/")[-1]
+        if sharding.rule_kind(path, shape) is not None or name in seen:
+            continue
+        seen.add(name)                 # one finding per leaf NAME per tree
+        out.append(Finding(
+            "sharding", "uncovered", f"{label}/{name}",
+            f"param leaf {path!r} (shape {shape}) matches no rule table in "
+            "dist/sharding.py — it replicates by fall-through, not by "
+            "decision; add the name to _COLUMN/_ROW/_EXPERT/_REPLICATE"))
+    return out
+
+
+def run(methods: Tuple[str, ...] = DEFAULT_METHODS,
+        archs: Optional[Tuple[str, ...]] = None) -> List[Finding]:
+    """Audit every registered arch's param tree. The adapter-method sweep
+    runs on the first arch only — adapter leaf names don't vary per family,
+    and eval_shape per combination isn't free."""
+    from repro.models import registry
+    out: List[Finding] = []
+    first_arch = None
+    for arch, method, model in registry.analysis_models(
+            methods=(methods[0],), archs=archs):
+        first_arch = first_arch or arch
+        out += audit_tree(model.init_shapes(), f"{arch}[{method}]")
+    if first_arch is not None and len(methods) > 1:
+        for arch, method, model in registry.analysis_models(
+                methods=methods[1:], archs=(first_arch,)):
+            out += audit_tree(model.init_shapes(), f"{arch}[{method}]")
+    return out

@@ -280,6 +280,7 @@ class FourierFT(AdapterMethod):
         return ("c",)
 
     def kernel_ops(self):
+        from repro.kernels import fourier_deltaw as fdk
         from repro.kernels import ops as kops
         return (
             KernelOp("deltaw", self.name, "einsum", _fourier_deltaw_einsum),
@@ -289,12 +290,14 @@ class FourierFT(AdapterMethod):
                      platforms=("tpu",),
                      max_dim=kops.FOURIER_INT32_SAFE_DIM,
                      requires=_fourier_basis_only,
-                     note="integer-phase MXU tiles (fourier_deltaw.py)"),
+                     note="integer-phase MXU tiles (fourier_deltaw.py)",
+                     caps=fdk.CAPS),
             KernelOp("deltaw", self.name, "interpret",
                      functools.partial(_fourier_deltaw_pallas,
                                        interpret=True),
                      max_dim=kops.FOURIER_INT32_SAFE_DIM,
-                     requires=_fourier_basis_only),
+                     requires=_fourier_basis_only,
+                     caps=fdk.CAPS),
             KernelOp("factored_apply", self.name, "einsum",
                      _fourier_factored_einsum),
             KernelOp("bank_apply", self.name, "einsum",
@@ -371,16 +374,19 @@ class DCTAdapter(AdapterMethod):
         return ("c",)
 
     def kernel_ops(self):
+        from repro.kernels import dct_deltaw as ddk
         from repro.kernels import ops as kops
         return (
             KernelOp("deltaw", self.name, "einsum", _dct_deltaw_einsum),
             KernelOp("deltaw", self.name, "pallas",
                      functools.partial(_dct_deltaw_pallas, interpret=False),
                      platforms=("tpu",), max_dim=kops.DCT_INT32_SAFE_DIM,
-                     note="cosine-only integer-phase tiles (dct_deltaw.py)"),
+                     note="cosine-only integer-phase tiles (dct_deltaw.py)",
+                     caps=ddk.CAPS),
             KernelOp("deltaw", self.name, "interpret",
                      functools.partial(_dct_deltaw_pallas, interpret=True),
-                     max_dim=kops.DCT_INT32_SAFE_DIM),
+                     max_dim=kops.DCT_INT32_SAFE_DIM,
+                     caps=ddk.CAPS),
             KernelOp("factored_apply", self.name, "einsum",
                      _dct_factored_einsum),
             KernelOp("bank_apply", self.name, "einsum", _dct_bank_einsum),

@@ -378,3 +378,101 @@ def analyze_module(txt: str) -> ModuleStats:
     if entry is not None:
         _walk(entry, 1.0, comps, stats, True)
     return stats
+
+
+# ---------------------------------------------------------------------------
+# Structural accessors for the static analyzer (repro.analysis)
+# ---------------------------------------------------------------------------
+
+def parse_module(txt: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    """Public parse: `compiled.as_text()` -> ({computation: [Instr]}, entry).
+    Same parser the cost walk uses; repro.analysis lints over it."""
+    return _parse_module(txt)
+
+
+def iter_instrs(comps: Dict[str, List[Instr]], entry: Optional[str]):
+    """Yield (instr, multiplicity, in_loop) over the entry call graph with
+    the same inlining rules as the cost walk: while bodies/conditions at the
+    trip-count multiplicity (and flagged `in_loop`), fusion/call/conditional
+    computations at the caller's multiplicity, reduce/sort `to_apply`
+    reducers not recursed. Cycles are cut (each computation is entered once
+    per distinct call path, bounded by the acyclic HLO call graph)."""
+    if entry is None:
+        return
+
+    def rec(comp: str, mult: float, in_loop: bool, seen: Tuple[str, ...]):
+        if comp in seen:
+            return
+        seen = seen + (comp,)
+        for ins in comps.get(comp, []):
+            op = ins.opcode
+            if op == "while":
+                trip = _trip_count(ins, comps)
+                yield ins, mult, in_loop
+                for key in ("body", "condition"):
+                    c = _called(ins.attrs, key)
+                    if c:
+                        yield from rec(c, mult * trip, True, seen)
+                continue
+            if op == "conditional":
+                branches = []
+                if "branch_computations" in ins.attrs:
+                    blob = ins.attrs.split("branch_computations", 1)[1]
+                    blob = blob.split("}", 1)[0]
+                    branches = re.findall(r"%([\w\.\-]+)", blob)
+                branches += [b for b in
+                             (_called(ins.attrs, "true_computation"),
+                              _called(ins.attrs, "false_computation")) if b]
+                yield ins, mult, in_loop
+                for b in branches:
+                    yield from rec(b, mult, in_loop, seen)
+                continue
+            if op == "fusion":
+                c = _called(ins.attrs, "calls")
+                if c:
+                    yield from rec(c, mult, in_loop, seen)
+                yield ins, mult, in_loop
+                continue
+            if op == "call":
+                c = _called(ins.attrs, "to_apply")
+                if c:
+                    yield from rec(c, mult, in_loop, seen)
+                yield ins, mult, in_loop
+                continue
+            yield ins, mult, in_loop
+
+    yield from rec(entry, 1.0, False, ())
+
+
+def custom_call_target(instr: Instr) -> Optional[str]:
+    """custom_call_target of a custom-call Instr, None otherwise."""
+    m = re.search(r'custom_call_target="([^"]+)"', instr.attrs)
+    return m.group(1) if m else None
+
+
+def aliased_params(txt: str) -> set:
+    """Entry parameter numbers the module's `input_output_alias` header maps
+    an output onto. XLA drops donated-but-unusable buffers from the header
+    entirely (the donation was wasted — the input buffer stays live), which
+    is exactly what repro.analysis's donation pass checks for."""
+    m = re.search(r"input_output_alias=\{", txt)
+    if not m:
+        return set()
+    i = m.end() - 1
+    depth = 0
+    for j in range(i, len(txt)):
+        depth += txt[j] == "{"
+        depth -= txt[j] == "}"
+        if depth == 0:
+            break
+    blob = txt[i:j + 1]
+    return {int(p) for p in re.findall(r"\((\d+),\s*\{", blob)}
+
+
+def entry_param_count(txt: str) -> int:
+    """Number of `parameter(N)` instructions in the entry computation."""
+    comps, entry = _parse_module(txt)
+    if entry is None:
+        return 0
+    return sum(1 for ins in comps.get(entry, [])
+               if ins.opcode == "parameter")

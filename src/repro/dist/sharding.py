@@ -59,6 +59,22 @@ _COLUMN = {"wq", "wk", "wv", "wi", "wg", "wz", "wx", "wbc", "wdt",
            "lm_head", "head", "conv_b"}
 _ROW = {"wo", "wo_mlp", "wo_ssm", "embed", "conv_w"}
 _EXPERT = {"we_i", "we_g", "we_o"}
+# Leaves that replicate BY DECISION, not by fall-through: norms and small
+# per-layer vectors (sharding them buys nothing and costs collectives),
+# the MoE router (d × num_experts — num_experts is tiny), SSM per-head
+# scalars, and adapter leaves (FourierFT coefficients are ~n·L numbers).
+# `repro.analysis`'s sharding-coverage audit flags any param leaf matching
+# NONE of the four tables — add new leaf names here (or to a sharded
+# table) rather than relying on the silent replicate fall-through.
+_REPLICATE = {
+    # norms (all families)
+    "attn_norm", "mlp_norm", "final_norm", "norm", "gnorm",
+    "q_norm", "k_norm",
+    # moe router, ssm per-head parameters
+    "router", "A_log", "dt_bias", "Dp",
+    # adapter leaves (core/adapter.py methods)
+    "c", "entries", "b1", "b2", "kernel", "lora_a", "lora_b", "delta_b",
+}
 
 
 def axis_size(mesh: Mesh, axis: str) -> int:
@@ -118,6 +134,29 @@ def fsdp_default(cfg: ModelConfig, mesh: Mesh) -> bool:
         return False
     per_dev = 2.0 * _backbone_param_estimate(cfg) / axis_size(mesh, "model")
     return per_dev > FSDP_FRACTION * HBM_BYTES
+
+
+def rule_kind(path: str, shape: Tuple[int, ...]) -> Optional[str]:
+    """Which rule table a param leaf resolves through: "expert" | "column" |
+    "row" | "replicate" | "scalar", or None when the name matches NO table
+    and the spec comes from the silent replicate fall-through. None is what
+    `repro.analysis`'s sharding-coverage audit flags: a new model family's
+    weight that nobody decided a placement for."""
+    name = path.split("/")[-1]
+    base = name[:-3] if name.endswith("__b") else name
+    if not shape:
+        return "scalar"
+    if base in _EXPERT:
+        # a named-but-underdimensioned leaf (e.g. a 1-D bias of a sharded
+        # weight) replicates BY the table's dim gate — covered, not a gap
+        return "expert" if len(shape) >= 3 else "replicate"
+    if base in _COLUMN:
+        return "column"
+    if base in _ROW:
+        return "row" if len(shape) >= 2 else "replicate"
+    if base in _REPLICATE:
+        return "replicate"
+    return None
 
 
 def _param_rule(path: str, shape: Tuple[int, ...], mesh: Mesh,

@@ -70,6 +70,13 @@ class KernelOp:
     d1/d2 whose integer phase reduction stays exact in int32 — includes the
     kernel's block padding, see DESIGN.md §Kernels), `requires` (predicate on
     the PEFTConfig, e.g. FourierFT's Pallas path needs basis == "fourier").
+
+    `caps` is the kernel's machine-checkable capability metadata (the
+    module-level `CAPS` dict of the implementing kernel module): block
+    sizes, phase kind, scratch shapes — everything `repro.analysis`'s
+    kernel-capability verifier needs to RE-DERIVE `max_dim` and the VMEM
+    footprint instead of trusting the declaration (DESIGN.md §Analysis).
+    None means "nothing to verify" (einsum references, XLA-op backends).
     """
     op: str
     method: str
@@ -79,6 +86,7 @@ class KernelOp:
     max_dim: Optional[int] = None
     requires: Optional[Callable] = None
     note: str = ""
+    caps: Optional[Dict] = None
 
     def supports(self, d1: int, d2: int, peft=None,
                  platform: Optional[str] = None) -> Tuple[bool, str]:
@@ -161,6 +169,19 @@ def backends_for(op: str, method) -> Tuple[str, ...]:
     m = _method_obj(method)
     ensure_method(m)
     return tuple(b for b in BACKENDS if (op, m.name, b) in _OPS)
+
+
+def all_ops() -> Tuple[KernelOp, ...]:
+    """Every registered KernelOp, with every known owner's declarations
+    collected first: all registered adapter methods plus the model-side
+    paged-attention owner shim. This is the enumeration surface of
+    `repro.analysis`'s kernel-capability verifier."""
+    from repro.core import adapter as adapter_api
+    for name in adapter_api.registered_methods():
+        ensure_method(name)
+    from repro.kernels import paged_attention
+    ensure_method(paged_attention.OWNER)
+    return tuple(_OPS[k] for k in sorted(_OPS))
 
 
 def _platform() -> str:

@@ -32,6 +32,20 @@ PI = 3.141592653589793
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 
+# Capability metadata for the repro.analysis kernel verifier (DESIGN.md
+# §Analysis). phase "half": the row phase product is (2j+1)·u reduced mod 4d
+# (max j = ceil(d/bm)·bm − 1, u < d), giving a derived int32-safe bound of
+# 32768 — ops.DCT_INT32_SAFE_DIM (32500) declares tighter, which is fine;
+# the verifier only fails bounds LOOSER than derived.
+CAPS = {
+    "kind": "deltaw_phase",
+    "phase": "half",
+    "bm": DEFAULT_BM,
+    "bn": DEFAULT_BN,
+    "trig_terms": 1,
+    "n_ref": 1024,
+}
+
 
 def _cos_block(idx0: jax.Array, size: int, dim: int, uv: jax.Array,
                c: jax.Array | None):

@@ -35,6 +35,23 @@ TWO_PI = 6.283185307179586
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 
+# Machine-checkable capability metadata (repro.analysis kernel verifier,
+# DESIGN.md §Analysis): enough to RE-DERIVE the int32 phase bound and the
+# VMEM footprint from first principles, so ops.FOURIER_INT32_SAFE_DIM can
+# never silently rot when someone retiles the kernel.
+#   phase:       "linear" — row phase product is j·u, j over the
+#                block-padded grid (max j = ceil(d/bm)·bm − 1), u < d
+#   trig_terms:  cos AND sin basis blocks per axis (2·(bm+bn)·n floats)
+#   n_ref:       reference spectral count for the VMEM budget check
+CAPS = {
+    "kind": "deltaw_phase",
+    "phase": "linear",
+    "bm": DEFAULT_BM,
+    "bn": DEFAULT_BN,
+    "trig_terms": 2,
+    "n_ref": 1024,
+}
+
 
 def _phase_block(idx0: jax.Array, size: int, dim: int, uv: jax.Array,
                  c: jax.Array | None):

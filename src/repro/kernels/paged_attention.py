@@ -59,6 +59,20 @@ from repro.models import attention as attn_mod
 
 NEG_INF = attn_mod.NEG_INF
 
+# Capability metadata for the repro.analysis kernel verifier (DESIGN.md
+# §Analysis): the declared online-softmax scratch layout, checked against
+# the canonical derivation (running max/denom are one f32 per (kv_head,
+# group, window-row) triple; the accumulator adds the head dim), plus
+# reference dims for the VMEM-footprint check. Must match the
+# `scratch_shapes` passed to pallas_call below — the verifier exists so
+# a retile can't change one without the other.
+CAPS = {
+    "kind": "paged_attention",
+    "scratch": {"m": ("K", "G", "W"), "l": ("K", "G", "W"),
+                "acc": ("K", "G", "W", "dh")},
+    "ref": {"K": 8, "G": 4, "W": 8, "dh": 128, "ps": 16},
+}
+
 
 # ---------------------------------------------------------------------------
 # einsum reference
@@ -186,10 +200,12 @@ class _PagedAttentionOwner:
                      functools.partial(paged_attention_pallas,
                                        interpret=False),
                      platforms=("tpu",),
-                     note="scalar-prefetch page gather, online softmax"),
+                     note="scalar-prefetch page gather, online softmax",
+                     caps=CAPS),
             KernelOp("paged_attention", self.name, "interpret",
                      functools.partial(paged_attention_pallas,
-                                       interpret=True)),
+                                       interpret=True),
+                     caps=CAPS),
         )
 
 

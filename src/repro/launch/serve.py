@@ -83,6 +83,11 @@ def main(argv=None):
                          "bank's zero row) or host-side n-gram prompt lookup")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="--speculative: draft tokens per slot per step")
+    ap.add_argument("--analyze", action="store_true",
+                    help="--continuous: after the replay, audit the live "
+                         "scheduler's jit signature counts against its "
+                         "declared compile bounds (repro.analysis recompile "
+                         "pass) and exit non-zero on any finding")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
@@ -177,6 +182,17 @@ def main(argv=None):
                   f"accept rate {s['spec_accept_rate']:.2f}, "
                   f"{s['spec_drafts_wasted']:.0f} drafts wasted over "
                   f"{s['spec_slot_steps']:.0f} slot-steps")
+        if args.analyze:
+            from repro.analysis import hlo_lint
+            found = hlo_lint.scheduler_recompile_findings(sched)
+            sigs = sched.compiled_signatures()
+            print("analyze: compiled signatures "
+                  + ", ".join(f"{k}={v}" for k, v in sorted(sigs.items())))
+            for f in found:
+                print(f.render())
+            if found:
+                raise SystemExit(1)
+            print("analyze: recompile audit clean")
         return
 
     ids = [tenant_ids[i % len(tenant_ids)] if tenant_ids else None

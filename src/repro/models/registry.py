@@ -318,3 +318,20 @@ def _merge_adapter_trees(trainable: Dict, frozen: Dict) -> Dict:
 def build(cfg: ModelConfig, peft: Optional[PEFTConfig] = None,
           remat: str = "none") -> Model:
     return Model(cfg, peft or PEFTConfig(), remat=remat)
+
+
+def analysis_models(methods: Tuple[str, ...] = ("fourierft",),
+                    archs: Optional[Tuple[str, ...]] = None):
+    """Yield (arch_id, method, Model) for every registered config × method at
+    reduced scale — the coverage surface `repro.analysis`'s sharding audit
+    walks (`init_shapes()` is eval_shape-cheap; nothing is materialized).
+    Unbuildable combinations (a method whose applicability predicate rejects
+    the family) are skipped: absent params can't need a sharding rule."""
+    import repro.configs as configs
+    for arch in (archs or tuple(configs.ARCHS)):
+        cfg = configs.reduced(configs.get(arch))
+        for m in methods:
+            try:
+                yield arch, m, build(cfg, PEFTConfig(method=m))
+            except (ValueError, NotImplementedError):
+                continue

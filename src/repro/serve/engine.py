@@ -333,6 +333,19 @@ class Engine:
         # one compiled graph per prompt length (padded batches share it)
         self._prefill = jax.jit(model.prefill)
 
+    def commit_tokens(self, arr) -> jax.Array:
+        """Place a host-built token array the way the jitted graphs hand
+        theirs back: committed replicated over the engine mesh. A host-
+        seeded step otherwise arrives UNcommitted while every device-fed
+        step arrives with a NamedSharding — two jit signatures for one
+        shape, which the recompile audit (repro.analysis) rightly flags."""
+        arr = jnp.asarray(arr, jnp.int32)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            arr = jax.device_put(arr, NamedSharding(self.mesh,
+                                                    PartitionSpec()))
+        return arr
+
     def _fresh_cache(self, per_slot: bool = False, paged: bool = False,
                      page_size: int = 16, n_pages: Optional[int] = None):
         cache = self.model.init_cache(self.batch, self.max_len,
@@ -498,6 +511,7 @@ class Engine:
                                       {"tokens": cur, **extra})
             note(nxt)
             cur = add_time_dim(nxt)
+        # the chunk's single drain point  # repro: allow(host-sync)
         gen = np.asarray(jnp.stack(history, axis=1))    # (B, T, ...)
         for i, r in enumerate(chunk):
             r.out = [int(t) for t in gen[i, :taken[i]].reshape(-1)]

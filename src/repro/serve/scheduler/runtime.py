@@ -404,7 +404,7 @@ class ContinuousScheduler:
         active = self.slots.active_slots()
         params, extra = self._batch_inputs()
         if self._toks_dev is None:
-            self._toks_dev = jnp.asarray(
+            self._toks_dev = self.engine.commit_tokens(
                 np.asarray(self._last, np.int32)[:, None])
         nt, self.cache = self._decode(params, self.cache,
                                       {"tokens": self._toks_dev, **extra})
@@ -445,6 +445,7 @@ class ContinuousScheduler:
         pending, self._pending = self._pending, []
         self._flag_dev = None
         self._flag_prev = None
+        # THE drain: one transfer per buffer  # repro: allow(host-sync)
         arr = np.asarray(jnp.stack([nt for _, nt, _ in pending]))
         for i, (t, _, occupants) in enumerate(pending):
             for slot, sr in occupants:
@@ -474,15 +475,21 @@ class ContinuousScheduler:
         if self.pager is not None:
             extra["scratch_pages"] = self._scratch_pages
         k = self.drafter.k
-        drafts = np.asarray(self.drafter.propose(), np.int32)
-        win = np.zeros((self.n_slots, k + 1), np.int32)
-        win[:, 0] = self._last
-        win[:, 1:] = drafts
+        # drafters propose on device (SelfDrafter) or host (NGramDrafter);
+        # the window assembles on device either way, and the host reads the
+        # window AND the verify scores in ONE transfer after dispatch —
+        # previously this synced twice per step (once on propose, once on
+        # the scores)
+        drafts = jnp.asarray(self.drafter.propose(), jnp.int32)
+        last = jnp.asarray(np.asarray(self._last, np.int32))
+        win_dev = jnp.concatenate([last[:, None], drafts], axis=1)
         out, self.cache = self._verify(params, self.cache,
-                                       {"tokens": jnp.asarray(win), **extra})
+                                       {"tokens": win_dev, **extra})
         self.t += 1
         self.metrics.on_step(len(active), self.n_slots)
-        arr = np.asarray(out)
+        # the step's single intended sync point  # repro: allow(host-sync)
+        wa = np.asarray(jnp.concatenate([win_dev, out], axis=1))
+        win, arr = wa[:, :k + 1], wa[:, k + 1:]
         deltas = np.zeros((self.n_slots,), np.int32)
         for slot in active:
             sr = self._sr[slot]
@@ -508,6 +515,57 @@ class ContinuousScheduler:
             if done:
                 yield self._finish(slot)
         self.cache = self._advance(self.cache, jnp.asarray(deltas))
+
+    # ---- static-analysis surface (repro.analysis, DESIGN.md §Analysis) ----
+    def compiled_signatures(self) -> Dict[str, int]:
+        """Compiled-signature count per jitted graph this scheduler
+        dispatches (jit cache sizes — no tracing, safe anytime). Note the
+        decode/prefill entries are the ENGINE's shared jits: a fresh Engine
+        per scheduler keeps the counts attributable to this scheduler."""
+        out = {"decode": int(self._decode._cache_size()),
+               "reset": int(self._reset._cache_size()),
+               "advance": int(self._advance._cache_size()),
+               "write": int(self._write._cache_size())}
+        if self.pager is not None:
+            out["prefill_paged"] = int(self._prefill_paged._cache_size())
+            out["copy_page"] = int(self._copy_page._cache_size())
+        else:
+            out["prefill"] = int(self._prefill._cache_size())
+        if self.drafter is not None:
+            out["verify"] = int(self._verify._cache_size())
+        if self.eos_id is not None:
+            out["or_eos"] = int(self._or_eos._cache_size())
+        return out
+
+    def expected_compile_bounds(self) -> Dict[str, int]:
+        """The compile-count CONTRACT the pow2 bucketing declares, keyed
+        like `compiled_signatures()`. decode/verify run at one fixed
+        (n_slots, ·) shape → exactly 1 graph regardless of churn; prime
+        prefills compile per pow2 prompt bucket (× cold + pow2 prefix-
+        window buckets when paged). With `bucket=False` prefill compiles
+        per distinct prompt length — unbounded by design — so no prefill
+        bound is declared and the analyzer skips it."""
+        bounds = {"decode": 1, "reset": 1, "advance": 1}
+        if self.drafter is not None:
+            bounds["verify"] = 1
+            # scalar rollback (drafter probe) + (B,) accept-commit deltas
+            bounds["advance"] = 2
+        if self.eos_id is not None:
+            bounds["or_eos"] = 1
+        if self.pager is not None:
+            bounds["copy_page"] = 1
+            bounds["write"] = 0            # dense-path graph, unused here
+        if self.bucket:
+            # pow2 buckets in [8, _bucket(max_len)]
+            n_len = _bucket(self.max_len).bit_length() - 3
+            if self.pager is not None:
+                # pow2 warm prefix-window widths in [1, _bucket(pages)]
+                wins = _bucket(self.pager.pages_per_seq, lo=1).bit_length()
+                bounds["prefill_paged"] = n_len * (1 + wins)
+            else:
+                bounds["prefill"] = n_len
+                bounds["write"] = n_len    # scratch k/v shape per bucket
+        return bounds
 
     # ---- main loop --------------------------------------------------------
     def events(self) -> Iterator[Event]:

@@ -40,8 +40,9 @@ import numpy as np
 class Drafter:
     """Protocol + no-op history hooks. A drafter is bound to ONE scheduler
     (`bind`), proposes an (n_slots, k) int32 token block per step
-    (`propose`; rows of FREE slots are ignored), and observes the slot
-    lifecycle through `on_prime` / `on_tokens` / `on_release`."""
+    (`propose`; rows of FREE slots are ignored; device OR host array — the
+    runtime folds either into its single per-step transfer), and observes
+    the slot lifecycle through `on_prime` / `on_tokens` / `on_release`."""
 
     k: int = 4
 
@@ -65,8 +66,11 @@ class Drafter:
 class SelfDrafter(Drafter):
     """Base-row self-drafting: k greedy decode steps with all adapter
     gathers pointed at the bank's reserved zero row (== the frozen base
-    model). Reuses the scheduler's compiled decode graph; one host sync
-    per proposal (the stacked k tokens)."""
+    model). Reuses the scheduler's compiled decode graph; the proposal
+    stays ON DEVICE — the probe loop feeds each step's output straight
+    back as the next input and never reads a token to the host, so the
+    k-step chain dispatches asynchronously and the runtime's verify drain
+    is the step's only sync point."""
 
     def __init__(self, k: int = 4):
         if k < 1:
@@ -77,7 +81,7 @@ class SelfDrafter(Drafter):
         super().bind(sched)
         self._zero_slots = None
 
-    def propose(self) -> np.ndarray:
+    def propose(self) -> jnp.ndarray:
         s = self._sched
         params, extra = s.engine.params, {}
         if s.pager is not None:
@@ -89,7 +93,7 @@ class SelfDrafter(Drafter):
             extra["adapter_slots"] = self._zero_slots
             params = {**params, "bank": s.bank.params}
         cache = s.cache
-        toks = jnp.asarray(np.asarray(s._last, np.int32)[:, None])
+        toks = s.engine.commit_tokens(np.asarray(s._last, np.int32)[:, None])
         outs = []
         for _ in range(self.k):
             nt, cache = s._decode(params, cache, {"tokens": toks, **extra})
@@ -98,7 +102,7 @@ class SelfDrafter(Drafter):
         # roll the probe steps back: pos is the only state that must not
         # move (probe KV rows sit past kv_len until verify rewrites them)
         s.cache = s._advance(cache, jnp.int32(-self.k))
-        return np.asarray(jnp.stack(outs, axis=1))
+        return jnp.stack(outs, axis=1)
 
 
 class NGramDrafter(Drafter):
