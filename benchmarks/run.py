@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.bench_serve_scheduler",
     "benchmarks.bench_serve_paging",
     "benchmarks.bench_serve_spec",
+    "benchmarks.bench_serve_gateway",
     "benchmarks.bench_analysis",
 ]
 
@@ -59,11 +60,20 @@ def parse_row(row: str) -> tuple:
 
 
 def dump_prefix_json(rows, prefix, path) -> dict:
-    """Write every `<prefix>*` row as one JSON object keyed by row name
-    (empty runs — e.g. `--only table1` — leave the previous file alone)."""
+    """Merge every `<prefix>*` row into the JSON object keyed by row name:
+    re-run rows replace their previous values, rows a partial run (e.g.
+    `--only serve_gateway`) did not produce keep theirs, and empty runs
+    leave the file alone."""
     picked = dict(parse_row(r) for r in rows if r.startswith(prefix))
     if picked:
-        path.write_text(json.dumps(picked, indent=2, sort_keys=True) + "\n")
+        merged = {}
+        if path.exists():
+            try:
+                merged = json.loads(path.read_text())
+            except json.JSONDecodeError:
+                merged = {}                    # corrupt file: rebuild
+        merged.update(picked)
+        path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
     return picked
 
 

@@ -1,0 +1,8 @@
+"""OpenAI-compatible async serving gateway over the continuous runtime
+(DESIGN.md §Gateway): wire protocol, scheduler bridge, HTTP server."""
+from repro.serve.gateway.bridge import RequestHandle, SchedulerBridge
+from repro.serve.gateway.protocol import (
+    ADAPTER_PREFIX, MODEL_BASE, ApiError, encode_chat, encode_text,
+    parse_request, prometheus_text,
+)
+from repro.serve.gateway.server import GatewayServer

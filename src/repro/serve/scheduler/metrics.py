@@ -61,7 +61,15 @@ class RequestMetrics:
 
 
 class ServingMetrics:
-    def __init__(self):
+    # monotonic cumulative counters: never reset within a serving process.
+    # `ServingMetrics(carry=old)` copies them forward, and the runtime's
+    # reset_metrics() uses exactly that — so a /metrics scrape (gateway)
+    # never sees a counter dip even across per-run percentile resets.
+    COUNTERS = ("requests_submitted_total", "requests_admitted_total",
+                "requests_finished_total", "requests_cancelled_total",
+                "requests_rejected_total", "tokens_emitted_total")
+
+    def __init__(self, carry: Optional["ServingMetrics"] = None):
         self.requests: Dict[int, RequestMetrics] = {}
         self.occupancy: List[float] = []       # active/slots per decode step
         self.steps = 0
@@ -71,6 +79,9 @@ class ServingMetrics:
         # ACTIVE slot per verify step
         self.spec_slot_steps = 0
         self.accepted_hist: Dict[int, int] = {}  # emitted-per-step -> count
+        for name in self.COUNTERS:
+            setattr(self, name, getattr(carry, name, 0) if carry else 0)
+        self.queue_depth = 0                   # gauge: pending admissions
 
     # ---- lifecycle hooks (called by the runtime) --------------------------
     def start(self) -> None:
@@ -84,13 +95,16 @@ class ServingMetrics:
 
     def on_arrival(self, rid: int, t: float) -> None:
         self.requests[rid] = RequestMetrics(arrival=t)
+        self.requests_submitted_total += 1
 
     def on_admit(self, rid: int, t: float) -> None:
         self.requests[rid].admitted = t
+        self.requests_admitted_total += 1
 
     def on_token(self, rid: int, t: float) -> None:
         r = self.requests[rid]
         r.n_tokens += 1
+        self.tokens_emitted_total += 1
         if r.first_token is None:
             r.first_token = t
 
@@ -99,6 +113,21 @@ class ServingMetrics:
 
     def on_finish(self, rid: int, t: float) -> None:
         self.requests[rid].finished = t
+        self.requests_finished_total += 1
+
+    def on_cancel(self, rid: int, t: float) -> None:
+        """A queued or mid-stream request was aborted (client disconnect,
+        timeout): stamp it finished so per-run aggregates stay consistent,
+        and count it separately from natural completions."""
+        r = self.requests.get(rid)
+        if r is not None and r.finished is None:
+            r.finished = t
+        self.requests_cancelled_total += 1
+
+    def on_reject(self) -> None:
+        """An admission-side rejection (gateway backpressure 429) — counted
+        without a request record: the request never entered the queue."""
+        self.requests_rejected_total += 1
 
     def on_step(self, active: int, slots: int) -> None:
         self.steps += 1
@@ -141,7 +170,10 @@ class ServingMetrics:
             "prime_s_p90": nearest_rank(primes, 0.90),
             "wall_s": wall,
             "tokens_per_s": self.total_tokens / wall if wall > 0 else 0.0,
+            "queue_depth": float(self.queue_depth),
         }
+        for name in self.COUNTERS:
+            out[name] = float(getattr(self, name))
         if self.spec_slot_steps:
             drafted = sum(r.drafted for r in self.requests.values())
             accepted = sum(r.accepted for r in self.requests.values())

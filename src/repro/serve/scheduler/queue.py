@@ -78,6 +78,16 @@ class RequestQueue:
         """Earliest pending arrival stamp (the idle-skip target), or None."""
         return self._pending[0].arrival if self._pending else None
 
+    def remove(self, rid: int) -> Optional[ScheduledRequest]:
+        """Withdraw a pending (not yet admitted) request by id — the
+        cancellation path for queued requests (runtime.cancel). Returns the
+        removed entry, or None when `rid` is not pending (already admitted,
+        finished, or unknown)."""
+        for i, sr in enumerate(self._pending):
+            if sr.rid == rid:
+                return self._pending.pop(i)
+        return None
+
     def pop_next(self, now: float,
                  admit: Callable[[ScheduledRequest], bool],
                  resident: Collection[str] = ()) -> Optional[ScheduledRequest]:

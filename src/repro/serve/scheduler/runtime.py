@@ -196,15 +196,19 @@ class ContinuousScheduler:
                              "has no bank")
         rid = self.queue.push(request, arrival)
         self.metrics.on_arrival(rid, float(arrival))
+        self.metrics.queue_depth = len(self.queue)
         return rid
 
     def reset_metrics(self) -> None:
-        """Fresh metrics AND a rewound decode-step clock for a new trace
-        replay (compiled graphs stay warm). Only meaningful between drains —
-        rewinding under live requests would corrupt their stamps."""
+        """Fresh per-run metrics AND a rewound decode-step clock for a new
+        trace replay (compiled graphs stay warm). Only meaningful between
+        drains — rewinding under live requests would corrupt their stamps.
+        The monotonic cumulative counters (requests admitted/cancelled/…,
+        ServingMetrics.COUNTERS) carry over: a /metrics scrape must never
+        see them dip."""
         if self.slots.any_active() or len(self.queue):
             raise RuntimeError("reset_metrics with requests in flight")
-        self.metrics = ServingMetrics()
+        self.metrics = ServingMetrics(carry=self.metrics)
         self.t = 0.0
 
     # ---- admission --------------------------------------------------------
@@ -366,6 +370,46 @@ class ContinuousScheduler:
         sr.request.out = toks
         self.metrics.on_finish(sr.rid, t)
         return ("done", sr.rid, toks, t)
+
+    # ---- cancellation ------------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        """Abort request `rid` wherever it is — the client-disconnect path
+        (DESIGN.md §Gateway). A queued request is withdrawn; an ACTIVE one
+        releases its slot THIS step: `SlotManager.release` fires the
+        on_release hook (freeing the slot's KV pages), the tenant's bank
+        row is unpinned the moment the slot leaves `slots.adapter_ids()`,
+        and any not-yet-drained buffered tokens for the slot are discarded
+        by the drain's occupancy check (the same mechanism that drops
+        post-EOS overshoot). Returns True iff the request was found live;
+        its `.out` holds the tokens emitted before the abort."""
+        sr = self.queue.remove(rid)
+        if sr is not None:                     # still queued: never admitted
+            self._prefix_keys.pop(rid, None)
+            sr.request.out = []
+            self.metrics.on_cancel(rid, self.t)
+            self.metrics.queue_depth = len(self.queue)
+            return True
+        for slot in self.slots.active_slots():
+            sr = self._sr[slot]
+            if sr is None or sr.rid != rid:
+                continue
+            self._sr[slot] = None              # buffered overshoot for this
+            self._last[slot] = 0               # slot now drains to nowhere
+            self.slots.release(slot)           # frees pages via on_release
+            self._stale.add(slot)
+            if self.drafter is not None:
+                self.drafter.on_release(slot)
+            sr.request.out = self._outs.pop(rid, [])
+            if not self.slots.any_active():
+                # nothing left to drain for: drop the buffered-decode state
+                # now instead of carrying dead device work into the next
+                # admission cycle
+                self._pending.clear()
+                self._flag_dev = None
+                self._flag_prev = None
+            self.metrics.on_cancel(rid, self.t)
+            return True
+        return False
 
     # ---- decode -----------------------------------------------------------
     def _flush_stale(self) -> None:
@@ -568,6 +612,30 @@ class ContinuousScheduler:
         return bounds
 
     # ---- main loop --------------------------------------------------------
+    def tick(self) -> List[Event]:
+        """ONE scheduler round — admit every admissible arrived request,
+        then (if anything is decoding) one decode/verify step — returning
+        the round's events. Returns [] when there is nothing to do right
+        now: the queue is empty or its head hasn't arrived yet (the round
+        idle-skips the clock to the next arrival), or every arrived request
+        is deferred on resources. Unlike `events()`, tick() never raises on
+        an un-admittable backlog: under live traffic a later round can free
+        what admission waits on (a disconnect cancels a slot, a drain
+        unpins a tenant), so the async gateway pumps this from its own
+        loop (serve/gateway/bridge.py) and decides idleness itself."""
+        evs: List[Event] = list(self._admit_ready())
+        if self.slots.any_active():
+            if self.drafter is not None:
+                evs.extend(self._spec_decode_once())
+            else:
+                evs.extend(self._decode_once())
+        else:
+            nxt = self.queue.next_arrival()
+            if nxt is not None and nxt > self.t:
+                self.t = nxt           # idle: skip to the next arrival
+        self.metrics.queue_depth = len(self.queue)
+        return evs
+
     def events(self) -> Iterator[Event]:
         """Drain the queue: admit -> decode -> recycle until no request is
         pending or in flight, yielding the event stream. Re-entrant across
@@ -576,21 +644,17 @@ class ContinuousScheduler:
         self.metrics.start()
         try:
             while len(self.queue) or self.slots.any_active():
-                yield from self._admit_ready()
-                if not self.slots.any_active():
-                    nxt = self.queue.next_arrival()
-                    if nxt is None:
-                        break
-                    if nxt > self.t:       # idle: skip to the next arrival
-                        self.t = nxt
-                        continue
+                t_before = self.t
+                evs = self.tick()
+                yield from evs
+                if not evs and not self.slots.any_active() \
+                        and self.t == t_before and len(self.queue):
+                    # no admission, no decode, no idle-skip progress, yet
+                    # requests remain: a replay can never free what they
+                    # wait on (live traffic can — see tick())
                     raise RuntimeError(
                         "scheduler stalled: arrived requests cannot be "
                         "admitted although every slot is free")
-                if self.drafter is not None:
-                    yield from self._spec_decode_once()
-                else:
-                    yield from self._decode_once()
         finally:
             self.metrics.stop()
 
