@@ -73,14 +73,34 @@ def shared_prefix(model: str, prefix_len: int, vocab: int,
     return [int(t) for t in rng.integers(1, vocab, size=prefix_len)]
 
 
+def parse_priority_mix(spec: str) -> (List[str], List[float]):
+    """`"interactive:1,batch:2"` -> (classes, normalized weights).
+    A bare class name means weight 1."""
+    classes, weights = [], []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition(":")
+        classes.append(name)
+        weights.append(float(w) if w else 1.0)
+    total = sum(weights)
+    return classes, [w / total for w in weights]
+
+
 def make_traffic(*, n: int, vocab: int, models: List[str], zipf_a: float,
                  shared_frac: float, prefix_len: int, tail_len: int,
-                 max_new: int, stream: bool, seed: int) -> List[Dict]:
-    """`n` /v1/completions payloads; deterministic in the arguments."""
+                 max_new: int, stream: bool, seed: int,
+                 priorities: Optional[str] = None) -> List[Dict]:
+    """`n` /v1/completions payloads; deterministic in the arguments.
+    `priorities` ("cls:weight,..." — see parse_priority_mix) samples a
+    tiering class per request and sets the `priority` payload extension."""
     rng = np.random.default_rng(seed)
     w = 1.0 / (np.arange(1, len(models) + 1) ** max(zipf_a, 0.0))
     w /= w.sum()
     prefixes = {m: shared_prefix(m, prefix_len, vocab, seed) for m in models}
+    cls_names, cls_w = (parse_priority_mix(priorities)
+                        if priorities else ([], []))
     payloads = []
     for _ in range(n):
         model = models[int(rng.choice(len(models), p=w))]
@@ -90,8 +110,12 @@ def make_traffic(*, n: int, vocab: int, models: List[str], zipf_a: float,
         else:
             prompt = [int(t) for t in
                       rng.integers(1, vocab, size=prefix_len)] + tail
-        payloads.append({"model": model, "prompt": prompt,
-                         "max_tokens": max_new, "stream": stream})
+        payload = {"model": model, "prompt": prompt,
+                   "max_tokens": max_new, "stream": stream}
+        if cls_names:
+            payload["priority"] = \
+                cls_names[int(rng.choice(len(cls_names), p=cls_w))]
+        payloads.append(payload)
     return payloads
 
 
@@ -245,7 +269,38 @@ async def wait_ready(host: str, port: int, wait_s: float) -> bool:
 
 
 # ---- reporting -------------------------------------------------------------
-def summarize(results: List[ReqResult], wall_s: float) -> Dict:
+def slo_attainment(results: List[ReqResult], slo_ttft_ms: Optional[float],
+                   slo_itl_ms: Optional[float]) -> Dict[str, Dict]:
+    """Per-priority-class SLO attainment: the fraction of each class's
+    requests whose TTFT (and p99 inter-token gap) landed inside the SLO.
+    A failed request counts as missed — dropping traffic never helps the
+    attainment number."""
+    import math
+
+    from repro.serve.scheduler.metrics import nearest_rank
+
+    by_cls: Dict[str, List[ReqResult]] = {}
+    for r in results:
+        by_cls.setdefault(r.payload.get("priority", "batch"), []).append(r)
+    out: Dict[str, Dict] = {}
+    for cls, rs in sorted(by_cls.items()):
+        met = 0
+        for r in rs:
+            good = r.ok
+            if good and slo_ttft_ms is not None:
+                good = (not math.isnan(r.ttft_s)
+                        and r.ttft_s * 1e3 <= slo_ttft_ms)
+            if good and slo_itl_ms is not None and r.itl_s:
+                good = nearest_rank(sorted(r.itl_s), 0.99) * 1e3 \
+                    <= slo_itl_ms
+            met += bool(good)
+        out[cls] = {"n": len(rs), "attained": met / len(rs)}
+    return out
+
+
+def summarize(results: List[ReqResult], wall_s: float,
+              slo_ttft_ms: Optional[float] = None,
+              slo_itl_ms: Optional[float] = None) -> Dict:
     from repro.serve.scheduler.metrics import nearest_rank
 
     ok = [r for r in results if r.ok]
@@ -257,7 +312,7 @@ def summarize(results: List[ReqResult], wall_s: float) -> Dict:
     for r in results:
         m = r.payload["model"]
         by_model[m] = by_model.get(m, 0) + 1
-    return {
+    out = {
         "n": len(results), "ok": len(ok), "failed": len(results) - len(ok),
         "retries": sum(r.retries for r in results),
         "wall_s": wall_s, "tok_s": toks / max(wall_s, 1e-9),
@@ -269,6 +324,11 @@ def summarize(results: List[ReqResult], wall_s: float) -> Dict:
         "itl_p99_ms": nearest_rank(itl, 0.99) * 1e3,
         "by_model": by_model,
     }
+    if slo_ttft_ms is not None or slo_itl_ms is not None:
+        out["slo"] = {"ttft_ms": slo_ttft_ms, "itl_ms": slo_itl_ms,
+                      "by_class": slo_attainment(results, slo_ttft_ms,
+                                                 slo_itl_ms)}
+    return out
 
 
 # ---- verification ----------------------------------------------------------
@@ -288,7 +348,8 @@ def verify_replay(results: List[ReqResult], args) -> int:
     sched, _ = build_scheduler(args)
     reqs = [Request(prompt=jnp.asarray(r.payload["prompt"], jnp.int32),
                     max_new=int(r.payload["max_tokens"]),
-                    adapter_id=resolve_model(r.payload["model"]))
+                    adapter_id=resolve_model(r.payload["model"]),
+                    priority=r.payload.get("priority", "batch"))
             for r in ok]
     sched.serve(reqs)
     mismatches = 0
@@ -327,6 +388,14 @@ def main(argv=None) -> None:
     ap.add_argument("--vocab", type=int, default=512,
                     help="token-id space for synthetic prompts; must not "
                          "exceed the server's vocab")
+    ap.add_argument("--priorities", default=None,
+                    help="tiering-class mix 'cls[:weight],...', e.g. "
+                         "interactive:1,batch:2,best_effort:1 — sets the "
+                         "'priority' payload extension per request")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO: report per-class attainment against it")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="p99 inter-token-gap SLO, per request")
     ap.add_argument("--no-stream", action="store_true",
                     help="blocking JSON instead of SSE (no TTFT/ITL split)")
     ap.add_argument("--traffic-seed", type=int, default=0)
@@ -349,7 +418,8 @@ def main(argv=None) -> None:
         n=args.n, vocab=args.vocab, models=models, zipf_a=args.zipf_a,
         shared_frac=args.shared_frac, prefix_len=args.prefix_len,
         tail_len=args.tail_len, max_new=args.max_new,
-        stream=not args.no_stream, seed=args.traffic_seed)
+        stream=not args.no_stream, seed=args.traffic_seed,
+        priorities=args.priorities)
 
     async def _go():
         if args.wait_s and not await wait_ready(args.host, args.port,
@@ -362,7 +432,8 @@ def main(argv=None) -> None:
             timeout_s=args.client_timeout)
 
     results, wall_s = asyncio.run(_go())
-    summary = summarize(results, wall_s)
+    summary = summarize(results, wall_s, slo_ttft_ms=args.slo_ttft_ms,
+                        slo_itl_ms=args.slo_itl_ms)
     print(json.dumps(summary, indent=2, sort_keys=True))
     for r in results:
         if not r.ok:

@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.bench_serve_paging",
     "benchmarks.bench_serve_spec",
     "benchmarks.bench_serve_gateway",
+    "benchmarks.bench_serve_tiering",
     "benchmarks.bench_analysis",
 ]
 

@@ -57,6 +57,23 @@ def add_model_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--draft-k", type=int, default=4)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
+    # tiered-memory serving (DESIGN.md §Tiering)
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="constrain the device page pool (default: enough "
+                         "for every slot at max_len)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict lower-class slots under pressure instead "
+                         "of deferring higher-class admissions")
+    ap.add_argument("--preempt-mode", default="auto",
+                    choices=("auto", "swap", "recompute"),
+                    help="victim KV disposition (auto = cost estimate)")
+    ap.add_argument("--host-kv-pages", type=int, default=0,
+                    help="host-RAM KV tier capacity in pages (0 disables): "
+                         "swap-preempt snapshots and demoted prefix pages")
+    ap.add_argument("--host-adapter-slots", type=int, default=0,
+                    help="host-RAM adapter tier rows (0 disables): bank "
+                         "evictions spill here; admission refills without "
+                         "re-reading the checkpoint")
 
 
 def _model_cfg(args):
@@ -105,6 +122,7 @@ def build_scheduler(args):
     from repro.checkpoint import adapters as adapter_ckpt
     from repro.serve import (
         AdapterBank, ContinuousScheduler, Engine, NGramDrafter, SelfDrafter,
+        TieringConfig,
     )
 
     cfg = _model_cfg(args)
@@ -137,9 +155,17 @@ def build_scheduler(args):
     if args.speculative:
         drafter = (SelfDrafter(k=args.draft_k) if args.drafter == "self"
                    else NGramDrafter(k=args.draft_k))
+    tiering = None
+    if args.preempt or args.host_kv_pages or args.host_adapter_slots:
+        tiering = TieringConfig(host_kv_pages=args.host_kv_pages,
+                                host_adapter_slots=args.host_adapter_slots,
+                                preempt=args.preempt,
+                                mode=args.preempt_mode)
     sched = ContinuousScheduler(engine, eos_id=args.eos_id,
                                 paged=not args.dense_cache,
-                                page_size=args.page_size, drafter=drafter)
+                                page_size=args.page_size,
+                                n_pages=args.n_pages, drafter=drafter,
+                                tiering=tiering)
     return sched, tenant_ids
 
 

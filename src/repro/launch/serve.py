@@ -83,6 +83,14 @@ def main(argv=None):
                          "bank's zero row) or host-side n-gram prompt lookup")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="--speculative: draft tokens per slot per step")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="--continuous: constrain the device page pool")
+    ap.add_argument("--preempt", action="store_true",
+                    help="--continuous: tiered scheduling — evict "
+                         "lower-class slots under pressure (DESIGN.md "
+                         "§Tiering)")
+    ap.add_argument("--host-kv-pages", type=int, default=0,
+                    help="--continuous: host-RAM KV tier pages (0 off)")
     ap.add_argument("--analyze", action="store_true",
                     help="--continuous: after the replay, audit the live "
                          "scheduler's jit signature counts against its "
@@ -148,15 +156,22 @@ def main(argv=None):
     if cfg.n_codebooks:
         prompts = [jnp.tile(p[:, None], (1, cfg.n_codebooks)) for p in prompts]
     if args.continuous:
-        from repro.serve import ContinuousScheduler, NGramDrafter, SelfDrafter
+        from repro.serve import (
+            ContinuousScheduler, NGramDrafter, SelfDrafter, TieringConfig,
+        )
         from repro.serve.engine import Request
         drafter = None
         if args.speculative:
             drafter = (SelfDrafter(k=args.draft_k) if args.drafter == "self"
                        else NGramDrafter(k=args.draft_k))
+        tiering = None
+        if args.preempt or args.host_kv_pages:
+            tiering = TieringConfig(host_kv_pages=args.host_kv_pages,
+                                    preempt=args.preempt)
         sched = ContinuousScheduler(engine, paged=not args.dense_cache,
                                     page_size=args.page_size,
-                                    drafter=drafter)
+                                    n_pages=args.n_pages,
+                                    drafter=drafter, tiering=tiering)
         n = args.trace_n
         reqs = [Request(prompt=prompts[i % len(prompts)],
                         max_new=1 + (5 * i + 3) % args.max_new,

@@ -8,3 +8,7 @@ from repro.serve.scheduler import (
     ContinuousScheduler, RequestQueue, ServingMetrics, SlotManager,
 )
 from repro.serve.spec import Drafter, NGramDrafter, SelfDrafter
+from repro.serve.tiering import (
+    DEFAULT_PRIORITY, PRIORITIES, HostAdapterTier, HostPagePool,
+    TieringConfig, priority_rank,
+)

@@ -79,6 +79,8 @@ class Request:
     max_new: int = 16
     adapter_id: Optional[str] = None   # resident AdapterBank tenant (or base)
     out: Optional[List[int]] = None
+    priority: str = "batch"            # serve/tiering class: interactive |
+                                       # batch | best_effort
 
 
 class BankFullError(RuntimeError):
@@ -143,6 +145,9 @@ class AdapterBank:
         # adapter_id -> (method name, slot); insertion order = LRU order
         self._resident: "OrderedDict[str, Tuple[str, int]]" = OrderedDict()
         self._free = list(range(capacity))
+        # optional HostAdapterTier (serve/tiering): when set, evicted rows
+        # spill to pinned host arrays and reload without a checkpoint read
+        self.host_tier = None
 
     # ---- residency --------------------------------------------------------
     @property
@@ -162,6 +167,26 @@ class AdapterBank:
         for k in self._PROFILE_IRRELEVANT:
             d.pop(k)
         return tuple(sorted(d.items()))
+
+    def _snapshot_to_host(self, adapter_id: str, mname: str,
+                          slot: int) -> None:
+        """Spill one tenant's trainable rows to the host tier before the
+        slot is cleared. The slices are handed over with the D2H copy
+        dispatched asynchronously — the tier materializes them at its next
+        settle(), overlapping the copy with whatever the device runs next.
+        Must read the rows BEFORE `_clear_group_slot` zeroes them."""
+        if self.host_tier is None:
+            return
+        group = self.params[mname]
+        tree = {}
+        for site, leaves in group["sites"].items():
+            slices = {}
+            for leaf, v in leaves.items():
+                row = v[slot]
+                row.copy_to_host_async()
+                slices[leaf] = row
+            tree[site] = slices
+        self.host_tier.put(adapter_id, mname, tree)
 
     def _clear_group_slot(self, mname: str, slot: int) -> None:
         """Zero one slot row in one method group. Only the occupant's own
@@ -246,12 +271,17 @@ class AdapterBank:
                     f"resident tenant is pinned; cannot admit "
                     f"{adapter_id!r} until a pinned tenant drains")
             prev_m, slot = self._resident.pop(victim)
+            self._snapshot_to_host(victim, prev_m, slot)
             self._clear_group_slot(prev_m, slot)
         for site_name, leaf, v in writes:
             rows = group["sites"][site_name][leaf]
             group["sites"][site_name][leaf] = \
                 rows.at[slot].set(v.astype(rows.dtype))
         self._resident[adapter_id] = (peft.method, slot)
+        if self.host_tier is not None:
+            # any successful load supersedes a host copy (it would serve
+            # stale rows if the tenant re-trained); eviction re-spills
+            self.host_tier.drop(adapter_id)
         return slot
 
     def load_from_checkpoint(self, adapter_id: str,
@@ -268,8 +298,25 @@ class AdapterBank:
 
     def evict(self, adapter_id: str) -> None:
         mname, slot = self._resident.pop(adapter_id)
+        self._snapshot_to_host(adapter_id, mname, slot)
         self._clear_group_slot(mname, slot)
         self._free.append(slot)
+
+    def load_from_host(self, adapter_id: str,
+                       pinned: Sequence[str] = ()) -> Optional[int]:
+        """Make `adapter_id` resident from the host tier (serve/tiering),
+        or return None on a host miss — the caller then falls back to
+        `load_from_checkpoint`. Goes through `load()` so every validation
+        (profile match, shapes, pinned-victim selection) applies to host
+        reloads exactly as to checkpoint loads."""
+        if self.host_tier is None:
+            return None
+        hit = self.host_tier.get(adapter_id)
+        if hit is None:
+            return None
+        method, tree = hit
+        return self.load(adapter_id, tree, self.profiles[method],
+                         pinned=pinned)
 
     def touch(self, adapter_id: str) -> None:
         self._resident.move_to_end(adapter_id)

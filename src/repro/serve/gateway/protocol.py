@@ -28,6 +28,10 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+# jax-free by design (serve/tiering/config.py): the priority classes the
+# `priority` request extension accepts
+from repro.serve.tiering.config import DEFAULT_PRIORITY, PRIORITIES
+
 MODEL_BASE = "base"
 ADAPTER_PREFIX = "adapter:"
 CHAT_ROLES = ("system", "user", "assistant", "tool")
@@ -101,6 +105,8 @@ class ParsedRequest:
     prompt: List[int]              # token ids
     max_new: int
     stream: bool
+    priority: str = DEFAULT_PRIORITY   # extension: tiering class
+                                       # (interactive|batch|best_effort)
 
 
 def _require(cond: bool, message: str, status: int = 400) -> None:
@@ -156,6 +162,9 @@ def parse_request(kind: str, payload, *, vocab: int, max_len: int,
              and max_new >= 1, "'max_tokens' must be an integer >= 1")
     stream = payload.get("stream", False)
     _require(isinstance(stream, bool), "'stream' must be a boolean")
+    priority = payload.get("priority", DEFAULT_PRIORITY)
+    _require(isinstance(priority, str) and priority in PRIORITIES,
+             f"'priority' must be one of {list(PRIORITIES)}")
     for knob in ("n", "best_of"):
         _require(payload.get(knob, 1) == 1,
                  f"'{knob}' != 1 is not supported (greedy decoding "
@@ -170,7 +179,8 @@ def parse_request(kind: str, payload, *, vocab: int, max_len: int,
              f"context window ({max_len})", status=400)
     return ParsedRequest(kind=kind, model=payload["model"],
                          adapter_id=adapter_id, prompt=prompt,
-                         max_new=max_new, stream=stream)
+                         max_new=max_new, stream=stream,
+                         priority=priority)
 
 
 # ---- response framing -------------------------------------------------------

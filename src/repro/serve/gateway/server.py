@@ -218,8 +218,15 @@ class GatewayServer:
                                  {"object": "list", "data": data})
 
     async def _handle_metrics(self, writer) -> None:
-        summary = await self.bridge.call(
-            lambda: self.sched.metrics.summary())
+        def _scrape():
+            out = self.sched.metrics.summary()
+            gauges = getattr(self.sched, "resource_gauges", None)
+            if gauges is not None:
+                # tiering gauges (DESIGN.md §Tiering): bank residency,
+                # prefix-cache pages, host-tier occupancy
+                out.update(gauges())
+            return out
+        summary = await self.bridge.call(_scrape)
         summary["gateway_page_free_frac"] = self.bridge.free_page_frac()
         labeled = {"gateway_responses_total":
                    {f'code="{code}"': n
@@ -229,10 +236,20 @@ class GatewayServer:
                             "text/plain; version=0.0.4")
 
     # ---- generation --------------------------------------------------------
-    def _overloaded(self) -> bool:
+    def _overloaded(self, priority: str = "batch") -> bool:
+        """Class-aware backpressure (DESIGN.md §Tiering): interactive work
+        gets the full queue watermark and skips the page-frac gate (the
+        tiered scheduler preempts for it rather than queueing it behind
+        pressure); best_effort work is shed at half the watermark so it
+        never crowds out the classes above it."""
         queued = self.bridge.queued()
-        if queued >= self.max_queue:
+        watermark = self.max_queue
+        if priority == "best_effort":
+            watermark = max(1, self.max_queue // 2)
+        if queued >= watermark:
             return True
+        if priority == "interactive":
+            return False
         return (self.min_free_page_frac > 0 and queued > 0
                 and self.bridge.free_page_frac() < self.min_free_page_frac)
 
@@ -274,7 +291,7 @@ class GatewayServer:
         except ApiError as e:
             await self._respond_json(writer, e.status, e.body())
             return
-        if self._overloaded():
+        if self._overloaded(preq.priority):
             self.sched.metrics.on_reject()
             await self._respond_json(
                 writer, 429,
@@ -284,7 +301,8 @@ class GatewayServer:
                 extra={"Retry-After": f"{self.retry_after_s:g}"})
             return
         request = Request(prompt=jnp.asarray(preq.prompt, jnp.int32),
-                          max_new=preq.max_new, adapter_id=preq.adapter_id)
+                          max_new=preq.max_new, adapter_id=preq.adapter_id,
+                          priority=preq.priority)
         try:
             handle = await self.bridge.submit(
                 request, validate=self._adapter_gate(preq.adapter_id))

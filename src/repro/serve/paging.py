@@ -37,8 +37,8 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -98,11 +98,27 @@ class PageAllocator:
 
 
 class PrefixCache:
-    """Chained-hash prefix chunks -> immutable pages, LRU-evictable."""
+    """Chained-hash prefix chunks -> immutable pages, LRU-evictable.
 
-    def __init__(self, allocator: PageAllocator):
+    Entries form chains (chunk c's key hashes the whole prefix through it),
+    so evicting an interior chunk while a descendant stays cached would
+    strand the descendant: `match` walks front-to-back and stops at the
+    first miss, making the still-referenced descendant pages unreachable
+    dead weight. Eviction is therefore LEAF-FIRST — an entry is evictable
+    only while no cached entry names it as parent — which also means chains
+    shrink from the tail, exactly the cold end of a shared prefix.
+
+    `on_evict(key, page)` fires right before each page is freed; the
+    tiering runtime uses it to demote the page's KV to the host pool
+    (DESIGN.md §Tiering). The hook must not touch the cache."""
+
+    def __init__(self, allocator: PageAllocator,
+                 on_evict: Optional[Callable[[bytes, int], None]] = None):
         self._alloc = allocator
+        self.on_evict = on_evict
         self._entries: "OrderedDict[bytes, int]" = OrderedDict()
+        self._parent: Dict[bytes, Optional[bytes]] = {}
+        self._nkids: Dict[bytes, int] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -137,29 +153,56 @@ class PrefixCache:
             pages.append(page)
         return pages
 
-    def insert(self, key: bytes, page: int) -> None:
+    def insert(self, key: bytes, page: int,
+               parent: Optional[bytes] = None) -> None:
         """Register `page` as the immutable holder of chunk `key` (takes
-        one allocator reference). No-op when the chunk is already cached —
-        the existing page stays canonical."""
+        one allocator reference); `parent` is the previous chunk's key in
+        the chain (None for the first chunk). No-op when the chunk is
+        already cached — the existing page stays canonical."""
         if key in self._entries:
             self._entries.move_to_end(key)
             return
         self._alloc.ref(page)
         self._entries[key] = page
+        if parent is not None and parent not in self._entries:
+            parent = None   # orphan: the ancestor already aged out
+        self._parent[key] = parent
+        if parent is not None:
+            self._nkids[parent] = self._nkids.get(parent, 0) + 1
 
-    def evict_until_free(self, need: int) -> int:
-        """Drop LRU entries whose page no block table shares (refcount 1)
-        until `need` pages are free; returns the number evicted."""
+    def _drop(self, key: bytes, page: int) -> None:
+        if self.on_evict is not None:
+            self.on_evict(key, page)
+        del self._entries[key]
+        parent = self._parent.pop(key, None)
+        if parent is not None:
+            self._nkids[parent] -= 1
+            if not self._nkids[parent]:
+                del self._nkids[parent]
+        self._alloc.free(page)
+
+    def evict_until_free(self, need: int) -> Tuple[int, int]:
+        """Drop entries until `need` pages are free, leaf-first in LRU
+        order, touching only pages no block table shares (refcount 1).
+        Stops the moment the free list covers `need` — never overshoots —
+        and reports (evicted, shortfall) where shortfall is how many pages
+        the caller still lacks because every remaining entry is pinned (by
+        a live block table or a cached descendant)."""
         evicted = 0
-        for key in list(self._entries):
-            if self._alloc.free_count() >= need:
-                break
-            page = self._entries[key]
-            if self._alloc.refcount(page) == 1:
-                del self._entries[key]
-                self._alloc.free(page)
-                evicted += 1
-        return evicted
+        progress = True
+        while progress and self._alloc.free_count() < need:
+            progress = False
+            for key in list(self._entries):
+                if self._alloc.free_count() >= need:
+                    break
+                if self._nkids.get(key):
+                    continue        # interior chunk: descendants first
+                page = self._entries[key]
+                if self._alloc.refcount(page) == 1:
+                    self._drop(key, page)
+                    evicted += 1
+                    progress = True
+        return evicted, max(0, need - self._alloc.free_count())
 
 
 @dataclass
@@ -174,13 +217,25 @@ class PrimePlan:
     chunk_keys: List[bytes]    # chain keys of the prompt's full chunks —
                                # published via register_prompt AFTER the
                                # prime fills the pages
+    fills: List[Tuple[int, bytes]] = field(default_factory=list)
+                               # host-resident chunks to copy into owned
+                               # pages before the prime: (chunk index c,
+                               # chain key) — the target page is
+                               # block_row[c] (DESIGN.md §Tiering)
 
 
 class PagedKVCache:
-    """Block-table + page-lifecycle manager for one paged decode pool."""
+    """Block-table + page-lifecycle manager for one paged decode pool.
+
+    `host_has` (optional, set by the tiering runtime) answers whether a
+    chain key is resident in the host KV tier; when set, `plan_admit`
+    extends a device prefix match with host-resident chunks and returns
+    them as `PrimePlan.fills` for the runtime to copy back (promote)
+    before the prime."""
 
     def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
                  n_pages: Optional[int] = None):
+        self.host_has: Optional[Callable[[bytes], bool]] = None
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.n_slots = n_slots
@@ -239,6 +294,18 @@ class PagedKVCache:
             # must still be recomputed for the next-token logits, and its
             # KV row lives inside the final shared page -> COW that page
             cow_src = shared.pop()
+        fills: List[Tuple[int, bytes]] = []
+        if cow_src is None and self.host_has is not None:
+            # extend the device match with host-resident chunks. The fill
+            # target is an OWNED page (no pinning, no COW interplay), and
+            # we stop one token short of full coverage so the last prompt
+            # token always prefills on device for its logits — the host
+            # tier never recreates the COW corner.
+            c = len(shared)
+            while ((c + 1) * ps <= S - 1 and c < len(keys)
+                   and self.host_has(keys[c])):
+                fills.append((c, keys[c]))
+                c += 1
         # pin the matched pages (and the COW source) BEFORE any eviction:
         # once their original slots drained they sit at refcount 1 (cache-
         # only), exactly what the LRU pass below frees — matching without
@@ -261,7 +328,7 @@ class PagedKVCache:
                 self.allocator.free(page)
             if cow_src is not None:
                 self.allocator.free(cow_src)
-            shared, cow_src = [], None
+            shared, cow_src, fills = [], None, []
             n_owned = total_pages
             if self.allocator.free_count() < n_owned:
                 self.prefix_cache.evict_until_free(n_owned)
@@ -280,14 +347,17 @@ class PagedKVCache:
             cow = (cow_src, owned[0])
             held.append(cow_src)   # the pin guards src until the runtime's
         else:                      # copy_page; held through the request —
-            prefix_len = len(shared) * ps      # released with the slot
+            # filled chunks count as resident prefix: the runtime copies
+            # them into their owned pages before the prime runs
+            prefix_len = (len(shared) + len(fills)) * ps
             cow = None
         self._slot_pages[slot] = held
         self.block_tables[slot] = row
         self._device_bt = None
         return PrimePlan(slot=slot, prefix_len=prefix_len,
                          tail=prompt[prefix_len:], block_row=row,
-                         cow=cow, scratch_page=slot, chunk_keys=keys)
+                         cow=cow, scratch_page=slot, chunk_keys=keys,
+                         fills=fills)
 
     def register_prompt(self, plan: PrimePlan) -> None:
         """Publish the plan's full page-aligned chunks into the prefix
@@ -297,7 +367,39 @@ class PagedKVCache:
         from here on: tail writes stop at position S-1, decode writes start
         at S, both past every full chunk)."""
         for c, key in enumerate(plan.chunk_keys):
-            self.prefix_cache.insert(key, int(plan.block_row[c]))
+            self.prefix_cache.insert(key, int(plan.block_row[c]),
+                                     parent=plan.chunk_keys[c - 1] if c
+                                     else None)
+
+    def plan_resume(self, slot: int, total_pages: int) -> Optional[PrimePlan]:
+        """Block-table row for a swap-resumed request (DESIGN.md §Tiering):
+        all `total_pages` pages are freshly owned — the snapshot holds the
+        victim's exact KV including any formerly-shared prefix pages, so
+        nothing is matched or pinned and the restored pages stay private
+        (re-publishing them could collide with keys the cache still holds
+        canonical pages for; resume keeps it simple and private). Returns
+        None when the pool cannot cover it — the scheduler keeps the
+        request queued and re-offers next cycle."""
+        if self._slot_pages[slot]:
+            raise PageError(f"slot {slot} still holds pages")
+        if total_pages > self.pages_per_seq:
+            raise ValueError(
+                f"resume needs {total_pages} pages > pages_per_seq "
+                f"({self.pages_per_seq})")
+        if self.allocator.free_count() < total_pages:
+            self.prefix_cache.evict_until_free(total_pages)
+            if self.allocator.free_count() < total_pages:
+                return None
+        row = np.full((self.pages_per_seq,), slot, np.int32)
+        owned = [self.allocator.alloc() for _ in range(total_pages)]
+        for i, page in enumerate(owned):
+            row[i] = page
+        self._slot_pages[slot] = owned
+        self.block_tables[slot] = row
+        self._device_bt = None
+        return PrimePlan(slot=slot, prefix_len=0,
+                         tail=np.empty((0,), np.int32), block_row=row,
+                         cow=None, scratch_page=slot, chunk_keys=[])
 
     # ---- lifecycle --------------------------------------------------------
     def release(self, slot: int) -> None:

@@ -30,6 +30,8 @@ def nearest_rank(sorted_vals: Sequence[float], q: float) -> float:
 @dataclass
 class RequestMetrics:
     arrival: float
+    priority: str = "batch"            # serve/tiering class
+    preempted: int = 0                 # times this request was evicted
     admitted: Optional[float] = None
     first_token: Optional[float] = None
     finished: Optional[float] = None
@@ -67,7 +69,13 @@ class ServingMetrics:
     # never sees a counter dip even across per-run percentile resets.
     COUNTERS = ("requests_submitted_total", "requests_admitted_total",
                 "requests_finished_total", "requests_cancelled_total",
-                "requests_rejected_total", "tokens_emitted_total")
+                "requests_rejected_total", "tokens_emitted_total",
+                # tiering (DESIGN.md §Tiering)
+                "preemptions_total", "preempt_swap_total",
+                "preempt_recompute_total", "resumed_total",
+                "kv_pages_spilled_total", "kv_pages_filled_total",
+                "prefix_host_hits_total", "adapter_spills_total",
+                "adapter_host_hits_total")
 
     def __init__(self, carry: Optional["ServingMetrics"] = None):
         self.requests: Dict[int, RequestMetrics] = {}
@@ -93,8 +101,9 @@ class ServingMetrics:
             self.wall_s += time.perf_counter() - self._t0
             self._t0 = None
 
-    def on_arrival(self, rid: int, t: float) -> None:
-        self.requests[rid] = RequestMetrics(arrival=t)
+    def on_arrival(self, rid: int, t: float,
+                   priority: str = "batch") -> None:
+        self.requests[rid] = RequestMetrics(arrival=t, priority=priority)
         self.requests_submitted_total += 1
 
     def on_admit(self, rid: int, t: float) -> None:
@@ -128,6 +137,37 @@ class ServingMetrics:
         """An admission-side rejection (gateway backpressure 429) — counted
         without a request record: the request never entered the queue."""
         self.requests_rejected_total += 1
+
+    # ---- tiering hooks (DESIGN.md §Tiering) -------------------------------
+    def on_preempt(self, rid: int, t: float, mode: str) -> None:
+        """A victim slot was evicted for a higher-class candidate; `mode`
+        is how its KV leaves the device ("swap" or "recompute")."""
+        r = self.requests.get(rid)
+        if r is not None:
+            r.preempted += 1
+        self.preemptions_total += 1
+        if mode == "swap":
+            self.preempt_swap_total += 1
+        else:
+            self.preempt_recompute_total += 1
+
+    def on_resume(self, rid: int, t: float) -> None:
+        self.resumed_total += 1
+
+    def on_kv_spill(self, n_pages: int) -> None:
+        self.kv_pages_spilled_total += n_pages
+
+    def on_kv_fill(self, n_pages: int) -> None:
+        self.kv_pages_filled_total += n_pages
+
+    def on_prefix_host_hit(self, n_pages: int) -> None:
+        self.prefix_host_hits_total += n_pages
+
+    def on_adapter_spill(self) -> None:
+        self.adapter_spills_total += 1
+
+    def on_adapter_host_hit(self) -> None:
+        self.adapter_host_hits_total += 1
 
     def on_step(self, active: int, slots: int) -> None:
         self.steps += 1
@@ -174,6 +214,18 @@ class ServingMetrics:
         }
         for name in self.COUNTERS:
             out[name] = float(getattr(self, name))
+        # per-priority-class TTFT (only classes actually seen this run —
+        # single-class traffic keeps the summary exactly as before)
+        by_cls: Dict[str, List[float]] = {}
+        for r in self.requests.values():
+            if r.ttft_steps is not None:
+                by_cls.setdefault(r.priority, []).append(r.ttft_steps)
+        if len(by_cls) > 1:
+            for cls, vals in by_cls.items():
+                vals.sort()
+                out[f"n_requests_{cls}"] = float(len(vals))
+                out[f"ttft_steps_p50_{cls}"] = nearest_rank(vals, 0.50)
+                out[f"ttft_steps_p90_{cls}"] = nearest_rank(vals, 0.90)
         if self.spec_slot_steps:
             drafted = sum(r.drafted for r in self.requests.values())
             accepted = sum(r.accepted for r in self.requests.values())

@@ -48,6 +48,7 @@ Two throughput paths sit on top of the plain per-step decode loop:
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -59,8 +60,24 @@ from repro.serve.paging import PagedKVCache, PrefixCache, PrimePlan
 from repro.serve.scheduler.metrics import ServingMetrics
 from repro.serve.scheduler.queue import RequestQueue, ScheduledRequest
 from repro.serve.scheduler.slots import SlotManager
+from repro.serve.tiering import (
+    PRIORITIES, HostAdapterTier, HostPagePool, TieringConfig, VictimInfo,
+    choose_mode, choose_victim, priority_rank,
+)
 
-Event = Tuple  # ("admit", rid, slot, t) | ("token", rid, tok, t) | ("done", rid, toks, t)
+Event = Tuple  # ("admit", rid, slot, t) | ("token", rid, tok, t)
+               # | ("done", rid, toks, t) | ("preempt", rid, slot, t)
+               # | ("resume", rid, slot, t)
+
+
+@dataclass
+class ResumeState:
+    """How a preempted request comes back (queue.ScheduledRequest.resume):
+    "swap" restores the host snapshot of its KV pages; "recompute"
+    re-prefills prompt + everything already emitted. Either way the
+    resumed stream is bit-identical to an unpreempted run (DESIGN.md
+    §Tiering)."""
+    mode: str
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -96,6 +113,12 @@ class ContinuousScheduler:
     eos_sync_every: max decode steps between token drains when eos_id is
              set and no completion is otherwise due (bounds both EOS
              detection latency and wasted overshoot steps).
+    tiering: optional `serve.tiering.TieringConfig` — priority classes,
+             preempt-and-resume under page/bank pressure, and host-RAM
+             tiers for KV pages and adapter-bank rows (DESIGN.md
+             §Tiering). Preemption needs the paged cache; the adapter
+             host tier works either way. Resumed streams are bit-
+             identical (fp32) to an unpreempted run.
 
     Streaming API: `events()` yields ("admit", rid, slot, t),
     ("token", rid, token, t) and ("done", rid, tokens, t) tuples as they
@@ -108,7 +131,8 @@ class ContinuousScheduler:
                  policy: str = "fcfs", bucket: bool = True,
                  paged: bool = True, page_size: int = 16,
                  n_pages: Optional[int] = None, drafter=None,
-                 eos_sync_every: int = 4):
+                 eos_sync_every: int = 4,
+                 tiering: Optional[TieringConfig] = None):
         if not engine.model.supports_slot_cache:
             raise NotImplementedError(
                 f"{engine.model.cfg.name}: continuous batching needs the "
@@ -171,6 +195,41 @@ class ContinuousScheduler:
             # verify-window overflow writes route to the slot's reserved
             # scratch page (paging.py: scratch page of slot i is page i)
             self._scratch_pages = jnp.arange(self.n_slots, dtype=jnp.int32)
+        # tiering (DESIGN.md §Tiering): host pools + page-pool move ops
+        self.tiering = tiering
+        self.host_kv: Optional[HostPagePool] = None
+        self.host_adapters: Optional[HostAdapterTier] = None
+        self._no_admit: set = set()        # preempted this admission round
+        if tiering is not None and self.pager is not None:
+            # page-pool spill/fill: model-agnostic ops on the paged cache
+            # dict (pk/pv pools + per-slot pos) — gathers are dispatched
+            # BEFORE the pages are freed/donated, so stream order reads
+            # the old contents; fills donate the cache like every other
+            # cache-threading jit here
+            self._spill_pages = jax.jit(
+                lambda c, idx: (jnp.take(c["pk"], idx, axis=1),
+                                jnp.take(c["pv"], idx, axis=1)))
+            self._fill_pages = jax.jit(
+                lambda c, k, v, idx: {**c,
+                                      "pk": c["pk"].at[:, idx].set(k),
+                                      "pv": c["pv"].at[:, idx].set(v)},
+                donate_argnums=(0,))
+            self._set_pos = jax.jit(
+                lambda c, slot, pos: {**c,
+                                      "pos": c["pos"].at[slot].set(pos)},
+                donate_argnums=(0,))
+            if tiering.host_kv_pages > 0:
+                self.host_kv = HostPagePool(tiering.host_kv_pages)
+                self.pager.host_has = self.host_kv.has_prefix
+                self.pager.prefix_cache.on_evict = self._demote_prefix_page
+        if tiering is not None and tiering.host_adapter_slots > 0 \
+                and self.bank is not None:
+            # the closure reads self.metrics at call time, so the counter
+            # survives reset_metrics() swapping the metrics object
+            self.host_adapters = HostAdapterTier(
+                tiering.host_adapter_slots,
+                on_spill=lambda: self.metrics.on_adapter_spill())
+            self.bank.host_tier = self.host_adapters
 
     # ---- submission -------------------------------------------------------
     def submit(self, request: Request, arrival: float = 0.0) -> int:
@@ -194,8 +253,12 @@ class ContinuousScheduler:
         if request.adapter_id is not None and self.bank is None:
             raise ValueError("request has an adapter_id but the engine "
                              "has no bank")
+        if request.priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {request.priority!r}; "
+                             f"one of {PRIORITIES}")
         rid = self.queue.push(request, arrival)
-        self.metrics.on_arrival(rid, float(arrival))
+        self.metrics.on_arrival(rid, float(arrival),
+                                priority=request.priority)
         self.metrics.queue_depth = len(self.queue)
         return rid
 
@@ -223,34 +286,70 @@ class ContinuousScheduler:
             return True
         pinned = [a for a in self.slots.adapter_ids() if a is not None]
         try:
+            if self.host_adapters is not None:
+                # host tier first: a hit skips the checkpoint read entirely
+                if self.bank.load_from_host(aid, pinned=pinned) is not None:
+                    self.metrics.on_adapter_host_hit()
+                    return True
             self.bank.load_from_checkpoint(aid, pinned=pinned)
         except BankFullError:
             return False
         return True
 
+    def _effective(self, sr: ScheduledRequest) -> Tuple[np.ndarray, int]:
+        """(prompt, max_new) as the admission path sees them. A resumed
+        request re-enters with prompt + everything already emitted as its
+        effective prompt and only its remaining budget left — identical
+        page totals and the exact slot invariants of an unpreempted run
+        at the same point (DESIGN.md §Tiering)."""
+        prompt = np.asarray(sr.request.prompt)
+        if sr.resume is None:
+            return prompt, sr.request.max_new
+        done = self._outs[sr.rid]
+        return (np.concatenate([prompt, np.asarray(done, np.int32)]),
+                sr.request.max_new - len(done))
+
     def _try_admit(self, sr: ScheduledRequest) -> bool:
         """Admission callback for the queue: bank residency first, then (if
         paged) the page plan — matching the prefix cache and allocating the
         slot's worst-case pages up-front, so decode never allocates. False
-        defers the request without head-of-line blocking the queue."""
+        defers the request without head-of-line blocking the queue.
+
+        Resumes ride the same path: a swap-resume allocates all its pages
+        privately (`plan_resume` — the snapshot holds the exact KV); a
+        recompute-resume plans its EFFECTIVE prompt through the ordinary
+        prefix-matching admission, so it may share cached prefix pages
+        ("recompute-from-prefix")."""
+        if sr.rid in self._no_admit:
+            return False       # just preempted: re-admitting it this round
+                               # would thrash it against its preemptor
         if not self._ensure_resident(sr):
             return False
-        if self.pager is not None:
-            memo = self._prefix_keys.get(sr.rid)
-            if memo is None:                     # hash + host-copy once;
-                prompt = np.asarray(sr.request.prompt)   # deferred requests
-                memo = (prompt, PrefixCache.chain_keys(  # are re-offered
-                    prompt, self.pager.page_size,        # every cycle
-                    sr.request.adapter_id))
-                self._prefix_keys[sr.rid] = memo
-            prompt, keys = memo
-            plan = self.pager.plan_admit(
-                self.slots.free_slots()[0], prompt, sr.request.max_new,
-                adapter_id=sr.request.adapter_id, keys=keys)
+        if self.pager is None:
+            return True
+        prompt, max_new = self._effective(sr)
+        if sr.resume is not None and sr.resume.mode == "swap":
+            total = -(-(int(prompt.shape[0]) + max_new - 1)
+                      // self.pager.page_size)
+            plan = self.pager.plan_resume(self.slots.free_slots()[0], total)
             if plan is None:
                 return False
             self._plans[sr.rid] = plan
-            self._prefix_keys.pop(sr.rid, None)
+            return True
+        memo = self._prefix_keys.get(sr.rid)
+        if memo is None:                     # hash + host-copy once;
+            memo = (prompt, PrefixCache.chain_keys(  # deferred requests
+                prompt, self.pager.page_size,        # are re-offered
+                sr.request.adapter_id))              # every cycle
+            self._prefix_keys[sr.rid] = memo
+        prompt, keys = memo
+        plan = self.pager.plan_admit(
+            self.slots.free_slots()[0], prompt, max_new,
+            adapter_id=sr.request.adapter_id, keys=keys)
+        if plan is None:
+            return False
+        self._plans[sr.rid] = plan
+        self._prefix_keys.pop(sr.rid, None)
         return True
 
     def _release_pages(self, slot: int, snapshot) -> None:
@@ -271,14 +370,41 @@ class ContinuousScheduler:
             batch["true_len"] = jnp.full((1,), n, jnp.int32)
         return P, batch
 
-    def _prime(self, sr: ScheduledRequest, slot: int) -> int:
+    def _promote_fills(self, plan: PrimePlan) -> None:
+        """Copy the plan's host-matched chunks back into their owned device
+        pages before the prime (one batched H2D + scatter; padded rows land
+        in the slot's scratch page). The entries stay host-resident — LRU
+        ages them out."""
+        n = len(plan.fills)
+        width = _bucket(n, lo=1)
+        k = v = idx = None
+        for i, (c, key) in enumerate(plan.fills):
+            hit = self.host_kv.get_prefix(key)
+            if hit is None:     # cannot happen: nothing evicts between the
+                raise RuntimeError(   # same-round plan and this promote
+                    "host prefix entry vanished between plan and prime")
+            hk, hv = hit
+            if k is None:
+                k = np.zeros((hk.shape[0], width) + hk.shape[2:], hk.dtype)
+                v = np.zeros_like(k)
+                idx = np.full((width,), plan.scratch_page, np.int32)
+            k[:, i], v[:, i] = hk[:, 0], hv[:, 0]
+            idx[i] = plan.block_row[c]
+        self.cache = self._fill_pages(self.cache, jnp.asarray(k),
+                                      jnp.asarray(v), jnp.asarray(idx))
+        self.metrics.on_kv_fill(n)
+        self.metrics.on_prefix_host_hit(n)
+
+    def _prime(self, sr: ScheduledRequest, slot: int,
+               prompt=None) -> int:
         """In-flight prefill: run the prompt through a batch-1 scratch
         prefill and splice its KV into `slot` of the live cache. Returns the
         first generated token. On the paged cache, only the UNSHARED TAIL of
         the prompt is computed (`Model.prefill_paged`): reused prefix pages
         enter the tail's attention through the block-table window, after the
-        COW clone when the plan calls for one."""
-        prompt = sr.request.prompt
+        COW clone when the plan calls for one. `prompt` overrides the
+        request's own (recompute-resume primes prompt + emitted)."""
+        prompt = sr.request.prompt if prompt is None else prompt
         params = self.engine.params
         extra: Dict = {}
         if self.bank is not None:
@@ -290,6 +416,8 @@ class ContinuousScheduler:
             plan = self._plans.pop(sr.rid)
             if plan.cow is not None:
                 self.cache = self._copy_page(self.cache, *plan.cow)
+            if plan.fills:
+                self._promote_fills(plan)
             _, batch = self._bucketed_prompt(jnp.asarray(plan.tail),
                                              int(plan.tail.shape[0]))
             batch.update(block_table=jnp.asarray(plan.block_row[None]),
@@ -327,35 +455,179 @@ class ContinuousScheduler:
         return tok
 
     def _admit_ready(self) -> Iterator[Event]:
-        while self.slots.free_slots() and len(self.queue):
-            resident = self.bank.resident_ids if self.bank else ()
-            sr = self.queue.pop_next(self.t, self._try_admit,
-                                     resident=resident)
-            if sr is None:
-                return
-            plan = self._plans.get(sr.rid)
-            slot = self.slots.acquire(sr.rid, budget=sr.request.max_new,
-                                      adapter_id=sr.request.adapter_id,
-                                      prompt_len=int(sr.request.prompt.shape[0]),
-                                      slot=plan.slot if plan else None)
-            self._sr[slot] = sr
-            self.metrics.on_admit(sr.rid, self.t)
-            tok = self._prime(sr, slot)
-            self._outs[sr.rid] = [tok]
+        self._no_admit = set()
+        try:
+            while len(self.queue):
+                resident = self.bank.resident_ids if self.bank else ()
+                sr = None
+                if self.slots.free_slots():
+                    sr = self.queue.pop_next(self.t, self._try_admit,
+                                             resident=resident)
+                if sr is not None:
+                    yield from self._admit_one(sr)
+                    continue
+                # blocked: no free slot, or every arrived request deferred
+                # on pages/bank. Deferral was the only option pre-tiering;
+                # with preemption on, evict a strictly-lower-class victim
+                # for the head-of-policy-order candidate and retry.
+                if (self.tiering is None or not self.tiering.preempt
+                        or self.pager is None):
+                    return
+                cand = self.queue.peek_next(self.t, resident=resident)
+                if cand is None or cand.rid in self._no_admit:
+                    return
+                evs = self._preempt_for(cand)
+                if evs is None:
+                    return
+                yield from evs
+                if not any(e[0] in ("preempt", "done") for e in evs):
+                    return    # drained tokens only: nothing was freed, so
+                              # retrying admission would spin
+        finally:
+            self._no_admit = set()
+
+    def _admit_one(self, sr: ScheduledRequest) -> Iterator[Event]:
+        """Acquire + prime one accepted request (fresh or resumed)."""
+        resume = sr.resume
+        prompt, max_new = self._effective(sr)
+        plan = self._plans.get(sr.rid)
+        slot = self.slots.acquire(sr.rid, budget=max_new,
+                                  adapter_id=sr.request.adapter_id,
+                                  prompt_len=int(prompt.shape[0]),
+                                  slot=plan.slot if plan else None)
+        self._sr[slot] = sr
+        if resume is not None and resume.mode == "swap":
+            # restore the snapshot: no prefill, no token — the slot picks
+            # up exactly where the victim stopped (pos = S_eff - 1, next
+            # input = the last emitted token), so the next decode emits
+            # the same token an unpreempted run would have
+            sr.resume = None
+            plan = self._plans.pop(sr.rid)
+            k, v, n_used = self.host_kv.pop_snapshot(sr.rid)
+            idx = np.full((k.shape[1],), plan.scratch_page, np.int32)
+            idx[:n_used] = plan.block_row[:n_used]
+            self.cache = self._fill_pages(self.cache, jnp.asarray(k),
+                                          jnp.asarray(v), jnp.asarray(idx))
+            self.cache = self._set_pos(self.cache, jnp.int32(slot),
+                                       jnp.int32(int(prompt.shape[0]) - 1))
+            self.metrics.on_kv_fill(n_used)
+            tok = self._outs[sr.rid][-1]
             self._last[slot] = tok
             if self._toks_dev is not None:
-                # mid-buffer admission: in-flight slots' next tokens live
-                # only on device, so splice the new slot's first token in
-                # instead of rebuilding from the (stale) host view
                 self._toks_dev = self._toks_dev.at[slot, 0].set(tok)
             if self.drafter is not None:
-                self.drafter.on_prime(slot, np.asarray(sr.request.prompt),
-                                      tok)
-            self.metrics.on_token(sr.rid, self.t)
-            yield ("admit", sr.rid, slot, self.t)
-            yield ("token", sr.rid, tok, self.t)
-            if self.slots.note_token(slot, tok):
-                yield self._finish(slot)
+                self.drafter.on_prime(slot, prompt[:-1], tok)
+            self.metrics.on_resume(sr.rid, self.t)
+            yield ("resume", sr.rid, slot, self.t)
+            return
+        if resume is not None:
+            sr.resume = None
+            self.metrics.on_resume(sr.rid, self.t)
+        else:
+            self.metrics.on_admit(sr.rid, self.t)
+        tok = self._prime(sr, slot, prompt=prompt)
+        if resume is None:
+            self._outs[sr.rid] = [tok]
+        else:
+            # recompute-resume: the prime re-prefilled prompt + emitted
+            # and produced the NEXT token of the stream
+            self._outs[sr.rid].append(tok)
+        self._last[slot] = tok
+        if self._toks_dev is not None:
+            # mid-buffer admission: in-flight slots' next tokens live
+            # only on device, so splice the new slot's first token in
+            # instead of rebuilding from the (stale) host view
+            self._toks_dev = self._toks_dev.at[slot, 0].set(tok)
+        if self.drafter is not None:
+            self.drafter.on_prime(slot, np.asarray(prompt), tok)
+        self.metrics.on_token(sr.rid, self.t)
+        self.queue.note_usage(sr.request.adapter_id, 1)
+        yield (("resume" if resume is not None else "admit"),
+               sr.rid, slot, self.t)
+        yield ("token", sr.rid, tok, self.t)
+        if self.slots.note_token(slot, tok):
+            yield self._finish(slot)
+
+    def _demote_prefix_page(self, key: bytes, page: int) -> None:
+        """PrefixCache on_evict hook: instead of dropping a cold prefix
+        page, gather its KV (dispatched BEFORE the page returns to the
+        free list — stream order reads the old contents even if a later
+        prime reuses the page) and hand the in-flight copy to the host
+        tier; `settle()` materializes it after the round's device work."""
+        k, v = self._spill_pages(self.cache,
+                                 jnp.full((1,), page, jnp.int32))
+        k.copy_to_host_async()
+        v.copy_to_host_async()
+        if self.host_kv.put_prefix(key, k, v):
+            self.metrics.on_kv_spill(1)
+
+    def _preempt_for(self, cand: ScheduledRequest) -> Optional[List[Event]]:
+        """Evict one strictly-lower-class victim slot so `cand` can admit
+        (DESIGN.md §Tiering). Returns the events produced (the pre-evict
+        drain may finish slots), or None when nothing is eligible. The
+        victim's KV leaves by snapshot-to-host ("swap") or is dropped for
+        re-prefill at resume ("recompute"), per the cost estimate; either
+        way it re-enters the queue with its rid, arrival, and emitted
+        tokens intact, and resumes bit-identical."""
+        # drain first: the host view of emitted tokens must be current
+        # before sizing/snapshotting a victim, and a buffered completion
+        # may free a slot outright — in which case just retry admission
+        # (a slot that was ALREADY free means the candidate is blocked on
+        # pages/bank, and eviction below is still the right move)
+        free_before = len(self.slots.free_slots())
+        evs = list(self._drain())
+        if len(self.slots.free_slots()) > free_before:
+            return evs
+        crank = priority_rank(cand.request.priority)
+        occupants = []
+        for slot in self.slots.active_slots():
+            vsr = self._sr[slot]
+            if vsr is None:
+                continue
+            st = self.slots.state(slot)
+            occupants.append(VictimInfo(
+                slot=slot,
+                rank=priority_rank(vsr.request.priority),
+                prompt_len=int(vsr.request.prompt.shape[0]),
+                emitted=len(self._outs[vsr.rid]),
+                # rows actually written: pos = prompt_len + taken - 1
+                used_pages=-(-(st.prompt_len + st.taken - 1)
+                             // self.pager.page_size)))
+        victim = choose_victim(crank, occupants)
+        if victim is None:
+            return evs if evs else None
+        vsr = self._sr[victim.slot]
+        mode = choose_mode(self.tiering, victim, self.pager.page_size,
+                           host_can_swap=self.host_kv is not None)
+        if mode == "swap":
+            # gather the victim's used pages (padded to a pow2 width with
+            # its scratch page — harmless dirt both ways) and pin the
+            # in-flight copy in the host pool; a pool too full of other
+            # snapshots degrades to recompute, never to waiting
+            n_used = victim.used_pages
+            width = _bucket(n_used, lo=1)
+            idx = np.full((width,), victim.slot, np.int32)
+            idx[:n_used] = self.pager.block_tables[victim.slot][:n_used]
+            k, v = self._spill_pages(self.cache, jnp.asarray(idx))
+            k.copy_to_host_async()
+            v.copy_to_host_async()
+            if self.host_kv.put_snapshot(vsr.rid, k, v, n_used):
+                self.metrics.on_kv_spill(n_used)
+            else:
+                mode = "recompute"
+        vsr.resume = ResumeState(mode)
+        self._sr[victim.slot] = None
+        self._last[victim.slot] = 0
+        self.slots.release(victim.slot)   # frees pages via on_release —
+        self._stale.add(victim.slot)      # AFTER the spill gather above
+        if self.drafter is not None:
+            self.drafter.on_release(victim.slot)
+        self._prefix_keys.pop(vsr.rid, None)   # resume re-hashes eff prompt
+        self.metrics.on_preempt(vsr.rid, self.t, mode)
+        self.queue.requeue(vsr)
+        self._no_admit.add(vsr.rid)
+        evs.append(("preempt", vsr.rid, victim.slot, self.t))
+        return evs
 
     def _finish(self, slot: int, t: Optional[float] = None) -> Event:
         t = self.t if t is None else t
@@ -383,9 +655,11 @@ class ContinuousScheduler:
         post-EOS overshoot). Returns True iff the request was found live;
         its `.out` holds the tokens emitted before the abort."""
         sr = self.queue.remove(rid)
-        if sr is not None:                     # still queued: never admitted
-            self._prefix_keys.pop(rid, None)
-            sr.request.out = []
+        if sr is not None:       # still queued: never admitted, or waiting
+            self._prefix_keys.pop(rid, None)   # to resume after preemption
+            if self.host_kv is not None:
+                self.host_kv.drop_snapshot(rid)
+            sr.request.out = self._outs.pop(rid, [])
             self.metrics.on_cancel(rid, self.t)
             self.metrics.queue_depth = len(self.queue)
             return True
@@ -499,6 +773,7 @@ class ContinuousScheduler:
                 self._outs[sr.rid].append(tok)
                 self._last[slot] = tok
                 self.metrics.on_token(sr.rid, t)
+                self.queue.note_usage(sr.request.adapter_id, 1)
                 yield ("token", sr.rid, tok, t)
                 if self.slots.note_token(slot, tok):
                     yield self._finish(slot, t)
@@ -551,6 +826,7 @@ class ContinuousScheduler:
                 self._outs[sr.rid].append(tok)
                 self._last[slot] = tok
                 self.metrics.on_token(sr.rid, self.t)
+                self.queue.note_usage(sr.request.adapter_id, 1)
                 yield ("token", sr.rid, tok, self.t)
             deltas[slot] = n_emit
             self.drafter.on_tokens(slot, emitted)
@@ -579,6 +855,10 @@ class ContinuousScheduler:
             out["verify"] = int(self._verify._cache_size())
         if self.eos_id is not None:
             out["or_eos"] = int(self._or_eos._cache_size())
+        if self.tiering is not None and self.pager is not None:
+            out["spill_pages"] = int(self._spill_pages._cache_size())
+            out["fill_pages"] = int(self._fill_pages._cache_size())
+            out["set_pos"] = int(self._set_pos._cache_size())
         return out
 
     def expected_compile_bounds(self) -> Dict[str, int]:
@@ -609,7 +889,33 @@ class ContinuousScheduler:
             else:
                 bounds["prefill"] = n_len
                 bounds["write"] = n_len    # scratch k/v shape per bucket
+        if self.tiering is not None and self.pager is not None:
+            # spill/fill widths are pow2-bucketed in [1, _bucket(pages)]
+            # regardless of the prompt-bucket flag (the widths come from
+            # page counts, not prompt lengths)
+            widths = _bucket(self.pager.pages_per_seq, lo=1).bit_length()
+            bounds["spill_pages"] = widths
+            bounds["fill_pages"] = widths
+            bounds["set_pos"] = 1
         return bounds
+
+    def resource_gauges(self) -> Dict[str, float]:
+        """Occupancy gauges for the gateway's /metrics scrape (DESIGN.md
+        §Tiering): bank residency, prefix-cache and page-pool fill, and
+        host-tier occupancy when tiering is on."""
+        out: Dict[str, float] = {}
+        if self.bank is not None:
+            out["bank_resident_adapters"] = float(len(self.bank.resident_ids))
+        if self.pager is not None:
+            out["prefix_cache_pages"] = float(len(self.pager.prefix_cache))
+            out["kv_pages_free"] = float(self.pager.allocator.free_count())
+        if self.host_kv is not None:
+            out["host_kv_pages_used"] = float(self.host_kv.used_pages)
+            out["host_kv_pages_capacity"] = float(self.host_kv.capacity_pages)
+        if self.host_adapters is not None:
+            out["host_adapter_rows"] = float(len(self.host_adapters))
+            out["host_adapter_capacity"] = float(self.host_adapters.capacity)
+        return out
 
     # ---- main loop --------------------------------------------------------
     def tick(self) -> List[Event]:
@@ -633,6 +939,13 @@ class ContinuousScheduler:
             nxt = self.queue.next_arrival()
             if nxt is not None and nxt > self.t:
                 self.t = nxt           # idle: skip to the next arrival
+        if self.host_kv is not None:
+            # materialize the round's in-flight spills now that the decode
+            # work is dispatched (the async D2H copies overlapped it);
+            # holding them longer would pin their HBM source buffers
+            self.host_kv.settle()
+        if self.host_adapters is not None:
+            self.host_adapters.settle()
         self.metrics.queue_depth = len(self.queue)
         return evs
 

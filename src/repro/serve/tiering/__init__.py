@@ -1,0 +1,14 @@
+"""Tiered-memory serving (DESIGN.md §Tiering): priority classes,
+preempt-and-resume, and host-RAM tiers for KV pages and adapter-bank rows.
+"""
+from repro.serve.tiering.config import (
+    DEFAULT_PRIORITY, PRIORITIES, TieringConfig, priority_rank,
+)
+from repro.serve.tiering.host_pool import HostAdapterTier, HostPagePool
+from repro.serve.tiering.preempt import VictimInfo, choose_mode, choose_victim
+
+__all__ = [
+    "DEFAULT_PRIORITY", "PRIORITIES", "TieringConfig", "priority_rank",
+    "HostAdapterTier", "HostPagePool",
+    "VictimInfo", "choose_mode", "choose_victim",
+]

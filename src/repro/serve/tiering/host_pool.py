@@ -1,0 +1,202 @@
+"""Host-RAM tiers for the serving runtime (DESIGN.md §Tiering).
+
+Two pools, both plain host-side bookkeeping over arrays that START as
+in-flight device values: the spill paths hand us jax arrays right after a
+`copy_to_host_async()` dispatch, we hold them un-materialized, and
+`settle()` — called by the runtime once per scheduler round, after the
+round's device work is dispatched — converts them to numpy. That keeps the
+D2H copies overlapped with decode instead of blocking the scheduler at the
+spill site, while still releasing the device buffers promptly (an
+unmaterialized spill pins its HBM copy until settled).
+
+`HostPagePool` — KV pages. Two populations share one page-count budget:
+  - prefix entries (one page, keyed by the prefix cache's chain hash):
+    demoted cold prefix pages, LRU-evictable, promoted back on a match;
+  - snapshots (keyed by request id): a preempted victim's used pages,
+    PINNED until the request resumes or is cancelled — losing one would
+    break the resume-exactness contract, so snapshots never evict and a
+    put that cannot fit even after draining every prefix entry fails
+    (the scheduler then falls back to recompute-from-prefix).
+
+`HostAdapterTier` — evicted AdapterBank rows ({site: {leaf: array}} trees
+keyed by tenant), LRU over `capacity` tenants. A host hit at admission
+skips the checkpoint read entirely; a miss falls back to
+`load_from_checkpoint` exactly as before.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def _materialize(arrays: List) -> None:
+    """In-place device -> numpy conversion of a spill entry's arrays.
+    By the time this runs the async D2H copy has usually landed, so the
+    sync is cheap; either way it is the tier's single intended sync."""
+    for i, a in enumerate(arrays):
+        if not isinstance(a, np.ndarray):
+            # settle point of the async spill  # repro: allow(host-sync)
+            arrays[i] = np.asarray(a)
+
+
+class HostPagePool:
+    """Host tier for KV pages: LRU prefix entries + pinned snapshots."""
+
+    def __init__(self, capacity_pages: int):
+        if capacity_pages < 1:
+            raise ValueError("HostPagePool needs capacity_pages >= 1")
+        self.capacity_pages = capacity_pages
+        # key -> [k, v] with k/v (L, 1, ps, n_kv, hd); LRU order
+        self._prefix: "OrderedDict[bytes, List]" = OrderedDict()
+        # rid -> ([k, v], n_pages) with k/v (L, P, ps, n_kv, hd)
+        self._snapshots: Dict[int, Tuple[List, int]] = {}
+        self._snap_pages = 0
+
+    # ---- accounting --------------------------------------------------------
+    @property
+    def used_pages(self) -> int:
+        return len(self._prefix) + self._snap_pages
+
+    @property
+    def free_pages(self) -> int:
+        return self.capacity_pages - self.used_pages
+
+    def __len__(self) -> int:
+        return len(self._prefix) + len(self._snapshots)
+
+    def _make_room(self, need: int) -> bool:
+        """Evict LRU prefix entries until `need` pages fit; False when even
+        an empty prefix side cannot cover it (snapshots never evict)."""
+        if need > self.capacity_pages - self._snap_pages:
+            return False
+        while self.free_pages < need:
+            self._prefix.popitem(last=False)
+        return True
+
+    # ---- prefix tier -------------------------------------------------------
+    def has_prefix(self, key: bytes) -> bool:
+        return key in self._prefix
+
+    def put_prefix(self, key: bytes, k, v) -> bool:
+        """Admit one demoted prefix page (k/v may be in-flight device
+        arrays). False when the pool cannot fit it — the page is simply
+        dropped, the pre-tiering behavior."""
+        if key in self._prefix:
+            self._prefix.move_to_end(key)
+            return True
+        if not self._make_room(1):
+            return False
+        self._prefix[key] = [k, v]
+        return True
+
+    def get_prefix(self, key: bytes) -> Optional[Tuple[np.ndarray,
+                                                       np.ndarray]]:
+        """Materialized (k, v) for one host-resident chunk (LRU-touched),
+        or None. The entry STAYS host-resident — a promotion copies it
+        back to device pages; the host copy ages out via LRU."""
+        entry = self._prefix.get(key)
+        if entry is None:
+            return None
+        self._prefix.move_to_end(key)
+        _materialize(entry)
+        return entry[0], entry[1]
+
+    # ---- snapshot tier -----------------------------------------------------
+    def put_snapshot(self, rid: int, k, v, n_pages: int) -> bool:
+        """Pin a preemption snapshot (page dim of k/v may be padded past
+        `n_pages` by the spill gather's pow2 bucketing — the budget charges
+        the stored width, which is what host RAM actually holds)."""
+        if rid in self._snapshots:
+            raise KeyError(f"request {rid} already holds a snapshot")
+        width = int(k.shape[1])
+        if not self._make_room(width):
+            return False
+        self._snapshots[rid] = ([k, v], n_pages)
+        self._snap_pages += width
+        return True
+
+    def pop_snapshot(self, rid: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Consume (materialized k, v, n_pages) at resume; frees budget."""
+        entry, n_pages = self._snapshots.pop(rid)
+        self._snap_pages -= int(entry[0].shape[1])
+        _materialize(entry)
+        return entry[0], entry[1], n_pages
+
+    def drop_snapshot(self, rid: int) -> bool:
+        """Discard a snapshot without resuming (cancelled request)."""
+        entry = self._snapshots.pop(rid, None)
+        if entry is None:
+            return False
+        self._snap_pages -= int(entry[0][0].shape[1])
+        return True
+
+    def has_snapshot(self, rid: int) -> bool:
+        return rid in self._snapshots
+
+    # ---- lifecycle ---------------------------------------------------------
+    def settle(self) -> None:
+        """Materialize every in-flight spill (runtime calls this once per
+        scheduler round, after dispatching the round's device work)."""
+        for entry in self._prefix.values():
+            _materialize(entry)
+        for entry, _ in self._snapshots.values():
+            _materialize(entry)
+
+
+class HostAdapterTier:
+    """LRU host tier for evicted AdapterBank rows."""
+
+    def __init__(self, capacity: int,
+                 on_spill: Optional[Callable[[], None]] = None):
+        if capacity < 1:
+            raise ValueError("HostAdapterTier needs capacity >= 1")
+        self.capacity = capacity
+        self.on_spill = on_spill
+        # aid -> (method, {site: [leaf names]}, [arrays in site/leaf order])
+        self._entries: "OrderedDict[str, Tuple[str, Dict, List]]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, adapter_id: str) -> bool:
+        return adapter_id in self._entries
+
+    def put(self, adapter_id: str, method: str,
+            tree: Dict[str, Dict]) -> None:
+        """Admit one evicted tenant's trainable rows ({site: {leaf: arr}};
+        arrays may be in-flight device slices). Evicts the LRU tenant past
+        capacity."""
+        names = {site: sorted(leaves) for site, leaves in tree.items()}
+        arrays = [tree[site][leaf] for site in sorted(names)
+                  for leaf in names[site]]
+        self._entries.pop(adapter_id, None)
+        self._entries[adapter_id] = (method, names, arrays)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        if self.on_spill is not None:
+            self.on_spill()
+
+    def get(self, adapter_id: str) -> Optional[Tuple[str, Dict]]:
+        """(method, materialized {site: {leaf: np.ndarray}}) or None."""
+        entry = self._entries.get(adapter_id)
+        if entry is None:
+            return None
+        self._entries.move_to_end(adapter_id)
+        method, names, arrays = entry
+        _materialize(arrays)
+        it = iter(arrays)
+        tree = {site: {leaf: next(it) for leaf in names[site]}
+                for site in sorted(names)}
+        return method, tree
+
+    def drop(self, adapter_id: str) -> bool:
+        """Discard a spilled row (a fresh device load supersedes it).
+        Returns whether anything was held."""
+        return self._entries.pop(adapter_id, None) is not None
+
+    def settle(self) -> None:
+        for _, _, arrays in self._entries.values():
+            _materialize(arrays)

@@ -262,6 +262,65 @@ class TestPagedKVCacheManager:
         pager.assert_no_leaks()
 
 
+class TestEvictExactlyEnough:
+    """DESIGN.md §Tiering: `evict_until_free(need)` frees exactly what
+    refcounts allow — never overshooting past `need` — and reports the
+    shortfall instead of silently stopping short."""
+
+    def _pool(self):
+        """Chain A (3 chunk pages, released -> evictable leaf-first) and
+        chain B (2 chunk pages, pinned by live slot 1)."""
+        pager = PagedKVCache(n_slots=2, max_len=32, page_size=4, n_pages=16)
+        a = pager.plan_admit(0, np.arange(13), 4)       # 3 full chunks
+        pager.register_prompt(a)
+        pager.release(0)
+        b = pager.plan_admit(1, np.arange(40, 49), 4)   # 2 full chunks
+        pager.register_prompt(b)
+        return pager
+
+    @given(st.integers(0, 16))
+    @settings(max_examples=25, deadline=None)
+    def test_exactly_enough_and_shortfall_property(self, need):
+        pager = self._pool()
+        before = pager.allocator.free_count()
+        evicted, shortfall = pager.prefix_cache.evict_until_free(need)
+        after = pager.allocator.free_count()
+        assert evicted == after - before
+        assert after <= max(before, need)      # never frees past `need`
+        assert shortfall == max(0, need - after)
+        # the pinned chain is untouchable: slot 1's prompt still fully
+        # matches once released, whatever `need` demanded
+        pager.release(1)
+        plan = pager.plan_admit(1, np.arange(40, 49), 4)
+        assert plan.prefix_len == 8
+        pager.release(1)
+        pager.assert_no_leaks()
+
+    def test_leaf_first_keeps_chain_prefix_matchable(self):
+        pager = self._pool()
+        before = pager.allocator.free_count()
+        evicted, shortfall = pager.prefix_cache.evict_until_free(before + 1)
+        assert (evicted, shortfall) == (1, 0)
+        # the evicted page was chain A's LEAF: the surviving prefix still
+        # matches (an interior eviction would orphan the whole chain)
+        plan = pager.plan_admit(0, np.arange(13), 4)
+        assert plan.prefix_len == 8
+        pager.release(0)
+        pager.release(1)
+
+    def test_shortfall_reported_when_everything_is_pinned(self):
+        pager = PagedKVCache(n_slots=1, max_len=32, page_size=4, n_pages=9)
+        plan = pager.plan_admit(0, np.arange(13), 4)
+        pager.register_prompt(plan)                    # slot 0 stays live
+        before = pager.allocator.free_count()
+        evicted, shortfall = pager.prefix_cache.evict_until_free(before + 3)
+        assert evicted == 0                            # all pinned by slot 0
+        assert shortfall == 3
+        assert pager.allocator.free_count() == before
+        pager.release(0)
+        pager.assert_no_leaks()
+
+
 # ---------------------------------------------------------------------------
 # End-to-end exactness: paged runtime vs dense runtime vs serial engine
 # ---------------------------------------------------------------------------

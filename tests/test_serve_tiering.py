@@ -1,0 +1,388 @@
+"""Tiered-memory serving (DESIGN.md §Tiering): priority/fair queue
+ordering, host tiers for KV pages and adapter rows, preempt-and-resume
+exactness (swap and recompute, heterogeneous tenants, speculation),
+preemption storms leaving no leaks, and the tiered-vs-deferral admission
+throughput acceptance cell."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import adapters as adapter_ckpt
+from repro.configs.base import PEFTConfig
+from repro.core import adapter as adapter_api
+from repro.core import peft as peft_mod
+from repro.models import build
+from repro.serve import (
+    AdapterBank, ContinuousScheduler, Engine, HostAdapterTier, HostPagePool,
+    Request, TieringConfig,
+)
+from repro.serve.scheduler.queue import RequestQueue
+from repro.serve.spec import NGramDrafter
+from repro.serve.tiering import VictimInfo, choose_mode, choose_victim
+
+TENANTS = ("tenant-fft", "tenant-lora")
+METHODS = ("fourierft", "lora")
+
+
+def _cfg():
+    return C.reduced(C.get("yi-6b")).replace(vocab=64, param_dtype="float32",
+                                             dtype="float32")
+
+
+def _base_model():
+    model = build(_cfg(), PEFTConfig(method="none"))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _profiles():
+    return {
+        "fourierft": PEFTConfig(method="fourierft", n=16, alpha=25.0,
+                                param_dtype="float32"),
+        "lora": PEFTConfig(method="lora", lora_r=2, param_dtype="float32"),
+    }
+
+
+def _export_tenants(model, directory):
+    profiles = _profiles()
+    for i, (tid, m) in enumerate(zip(TENANTS, METHODS)):
+        prof = profiles[m]
+        tree = peft_mod.init_adapters(jax.random.PRNGKey(10 + i),
+                                      model.sites, prof)
+        tree = jax.tree.map(
+            lambda x: x + 0.05 if jnp.issubdtype(x.dtype, jnp.floating)
+            else x, tree)
+        trainable = set(adapter_api.resolve(m).trainable_leaves(prof))
+        tree = {s: {k: v for k, v in d.items() if k in trainable}
+                for s, d in tree.items()}
+        adapter_ckpt.export_adapter(str(directory), tid, tree, prof)
+    return profiles
+
+
+def _serial(engine, req):
+    if req.adapter_id is not None and \
+            req.adapter_id not in engine.bank.resident_ids:
+        engine.bank.load_from_checkpoint(req.adapter_id)
+    out = engine.generate([req.prompt], max_new=req.max_new,
+                          adapter_ids=[req.adapter_id]
+                          if engine.bank is not None else None)[0]
+    return [int(t) for t in np.asarray(out).reshape(-1)]
+
+
+def _req(prompt, max_new, priority="batch", adapter_id=None):
+    return Request(prompt=jnp.asarray(prompt, jnp.int32), max_new=max_new,
+                   priority=priority, adapter_id=adapter_id)
+
+
+def _assert_clean(sched):
+    """Post-drain invariants: no leaked pages, slots, pins or snapshots."""
+    assert not sched.slots.any_active()
+    if sched.pager is not None:
+        sched.pager.assert_no_leaks()
+    if sched.host_kv is not None:
+        assert not sched.host_kv._snapshots
+    if sched.bank is not None:
+        # nothing is decoding, so no tenant row may stay pinned
+        assert all(a is None for a in sched.slots.adapter_ids())
+
+
+# ---- queue ordering ---------------------------------------------------------
+class TestPriorityQueue:
+    def test_priority_classes_order_every_policy(self):
+        for policy in RequestQueue.POLICIES:
+            q = RequestQueue(policy)
+            q.push(_req([1], 1, "best_effort"), arrival=0.0)
+            q.push(_req([2], 1, "interactive"), arrival=0.0)
+            q.push(_req([3], 1, "batch"), arrival=0.0)
+            got = [q.pop_next(0.0, lambda sr: True).request.priority
+                   for _ in range(3)]
+            assert got == ["interactive", "batch", "best_effort"], policy
+
+    def test_single_class_keeps_pre_tiering_order(self):
+        """Everything defaults to "batch": fcfs ordering must be exactly
+        arrival order (priority ranking is a no-op tie)."""
+        q = RequestQueue("fcfs")
+        rids = [q.push(_req([i], 1), arrival=float(i % 2)) for i in range(6)]
+        got = [q.pop_next(5.0, lambda sr: True).rid for _ in range(6)]
+        assert got == sorted(rids, key=lambda r: (r % 2 == 1, r))
+
+    def test_fair_share_prefers_quiet_tenant(self):
+        q = RequestQueue("fair")
+        q.push(_req([1], 1, adapter_id="chatty"), arrival=0.0)
+        q.push(_req([2], 1, adapter_id="quiet"), arrival=0.0)
+        q.note_usage("chatty", 100)
+        q.note_usage("quiet", 3)
+        assert q.peek_next(0.0).request.adapter_id == "quiet"
+        # ...but never across class boundaries
+        q.push(_req([3], 1, "interactive", adapter_id="chatty"), arrival=0.0)
+        assert q.peek_next(0.0).request.priority == "interactive"
+
+    def test_requeue_keeps_rid_and_position(self):
+        q = RequestQueue("fcfs")
+        r0 = q.push(_req([1], 1), arrival=0.0)
+        q.push(_req([2], 1), arrival=5.0)
+        sr = q.pop_next(9.0, lambda sr: True)
+        assert sr.rid == r0
+        q.requeue(sr)
+        nxt = q.peek_next(9.0)
+        assert nxt.rid == r0 and nxt is sr   # same identity, ahead again
+
+    def test_unknown_priority_rejected_at_submit(self):
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=32)
+        sched = ContinuousScheduler(eng)
+        with pytest.raises(ValueError, match="priority"):
+            sched.submit(_req([1, 2], 2, priority="urgent"))
+
+
+# ---- host tiers (unit) ------------------------------------------------------
+class TestHostPools:
+    def _page(self, tag):
+        k = np.full((2, 1, 4, 2, 3), float(tag), np.float32)
+        return k, -k
+
+    def test_prefix_lru_and_capacity(self):
+        pool = HostPagePool(capacity_pages=2)
+        for i in range(3):
+            assert pool.put_prefix(bytes([i]), *self._page(i))
+        assert not pool.has_prefix(b"\x00")     # LRU-evicted
+        assert pool.has_prefix(b"\x01") and pool.has_prefix(b"\x02")
+        k, _ = pool.get_prefix(b"\x01")
+        assert float(k[0, 0, 0, 0, 0]) == 1.0
+        assert pool.put_prefix(bytes([9]), *self._page(9))
+        assert pool.has_prefix(b"\x01")         # get() refreshed its LRU slot
+        assert not pool.has_prefix(b"\x02")
+
+    def test_snapshots_are_pinned_and_charged(self):
+        pool = HostPagePool(capacity_pages=3)
+        k = np.zeros((2, 2, 4, 2, 3), np.float32)  # 2 padded pages
+        assert pool.put_snapshot(7, k, k.copy(), n_pages=1)
+        assert pool.used_pages == 2             # charged at stored width
+        assert pool.put_prefix(b"p", *self._page(1))
+        # prefix eviction cannot make room by dropping the pinned snapshot
+        assert not pool.put_snapshot(8, k, k.copy(), n_pages=2)
+        with pytest.raises(KeyError):
+            pool.put_snapshot(7, k, k.copy(), n_pages=1)
+        _, _, n = pool.pop_snapshot(7)
+        assert n == 1 and pool.used_pages == 1
+        assert not pool.has_snapshot(7)
+
+    def test_adapter_tier_spill_callback_and_lru(self):
+        spills = []
+        tier = HostAdapterTier(2, on_spill=lambda: spills.append(1))
+        for i, aid in enumerate(("a", "b", "c")):
+            tier.put(aid, "lora", {"s": {"w": np.full((2,), i, np.float32)}})
+            assert len(spills) == i + 1
+        assert "a" not in tier and len(tier) == 2
+        method, tree = tier.get("b")
+        assert method == "lora" and float(tree["s"]["w"][0]) == 1.0
+        assert tier.drop("b") and "b" not in tier
+
+
+# ---- victim/mode policy (unit) ---------------------------------------------
+class TestPreemptPolicy:
+    def test_victim_strictly_lower_class_only(self):
+        occ = [VictimInfo(0, 1, 8, 4, 2), VictimInfo(1, 1, 8, 9, 2)]
+        v = choose_victim(0, occ)              # interactive vs two batch
+        assert v.slot == 0                     # least emitted loses least
+        assert choose_victim(1, occ) is None   # batch cannot evict batch
+
+    def test_mode_forcing_and_swap_requires_host(self):
+        v = VictimInfo(0, 1, 8, 4, 2)
+        cfg = TieringConfig(mode="swap", host_kv_pages=8)
+        assert choose_mode(cfg, v, 8, host_can_swap=True) == "swap"
+        assert choose_mode(cfg, v, 8, host_can_swap=False) == "recompute"
+        cfg = TieringConfig(mode="recompute")
+        assert choose_mode(cfg, v, 8, host_can_swap=True) == "recompute"
+
+    def test_auto_mode_tracks_cost_estimate(self):
+        cheap_swap = VictimInfo(0, 1, prompt_len=100, emitted=100,
+                                used_pages=1)
+        cheap_recompute = VictimInfo(0, 1, prompt_len=2, emitted=1,
+                                     used_pages=8)
+        cfg = TieringConfig(host_kv_pages=64)
+        assert choose_mode(cfg, cheap_swap, 8, True) == "swap"
+        assert choose_mode(cfg, cheap_recompute, 8, True) == "recompute"
+
+
+# ---- preempt-and-resume exactness ------------------------------------------
+# pool sizing: 3 slots, pps=6 -> 9 pages total, 6 allocatable; each batch
+# long (5 prompt + 20 new -> 24 positions) owns 3 pages, so two longs own
+# the entire pool and any interactive arrival must preempt to run
+LONGS = dict(prompt=[1, 2, 3, 4, 5], max_new=20)
+POOL = dict(page_size=8, n_pages=9)
+
+
+def _overload_trace(n_interactive=3, adapter_ids=(None, None, None)):
+    reqs = [_req(LONGS["prompt"], LONGS["max_new"], "batch", adapter_ids[0]),
+            _req([7, 8, 9], 18, "batch", adapter_ids[1])]
+    arrivals = [0.0, 0.0]
+    for i in range(n_interactive):
+        reqs.append(_req([11 + i, 12], 4, "interactive", adapter_ids[2]))
+        arrivals.append(3.0 + 4.0 * i)
+    return reqs, arrivals
+
+
+class TestPreemptExactness:
+    def _run(self, tiering, drafter=None, bank=None, trace=None):
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48, bank=bank)
+        sched = ContinuousScheduler(eng, drafter=drafter, tiering=tiering,
+                                    **POOL)
+        reqs, arrivals = trace or _overload_trace()
+        sched.serve(reqs, arrivals)
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        _assert_clean(sched)
+        return sched
+
+    def test_swap_resume_bit_identical(self):
+        sched = self._run(TieringConfig(mode="swap", host_kv_pages=32))
+        s = sched.metrics.summary()
+        assert s["preempt_swap_total"] >= 1
+        assert s["resumed_total"] >= 1
+        assert s["kv_pages_spilled_total"] >= 1
+        assert s["kv_pages_filled_total"] >= 1
+
+    def test_recompute_resume_bit_identical(self):
+        sched = self._run(TieringConfig(mode="recompute"))
+        s = sched.metrics.summary()
+        assert s["preempt_recompute_total"] >= 1
+        assert s["resumed_total"] >= 1
+        assert s["kv_pages_spilled_total"] == 0    # no host pool configured
+
+    def test_swap_degrades_to_recompute_when_host_full(self):
+        """A host pool too small for the victim's snapshot: the swap
+        choice must degrade per-victim to recompute, never fail the
+        preemption. The late arrival guarantees the victim has decoded
+        past one page, so its snapshot (2 pages) exceeds the pool (1)."""
+        reqs = [_req(LONGS["prompt"], LONGS["max_new"], "batch"),
+                _req([7, 8, 9], 18, "batch"),
+                _req([11, 12], 4, "interactive")]
+        sched = self._run(TieringConfig(mode="swap", host_kv_pages=1),
+                          trace=(reqs, [0.0, 0.0, 12.0]))
+        s = sched.metrics.summary()
+        assert s["preemptions_total"] >= 1
+        assert s["preempt_recompute_total"] >= 1
+
+    def test_heterogeneous_tenants_preempt_exact(self, tmp_path):
+        model, _ = _base_model()
+        profiles = _export_tenants(model, tmp_path)
+        bank = AdapterBank(model, profiles, capacity=3,
+                           checkpoint_dir=str(tmp_path))
+        trace = _overload_trace(
+            adapter_ids=("tenant-fft", None, "tenant-lora"))
+        sched = self._run(TieringConfig(host_kv_pages=32), bank=bank,
+                          trace=trace)
+        assert sched.metrics.summary()["preemptions_total"] >= 1
+
+    def test_speculative_preempt_exact(self):
+        sched = self._run(TieringConfig(mode="swap", host_kv_pages=32),
+                          drafter=NGramDrafter(k=3))
+        assert sched.metrics.summary()["preemptions_total"] >= 1
+
+    def test_preemption_storm_no_leaks(self):
+        """8 interactive arrivals hammer two pool-owning batch requests
+        through repeated preempt/resume cycles (tiny host pool: some swaps
+        degrade mid-storm); everything still drains exact and leak-free."""
+        trace = _overload_trace(n_interactive=8)
+        sched = self._run(TieringConfig(host_kv_pages=4), trace=trace)
+        s = sched.metrics.summary()
+        assert s["preemptions_total"] >= 2
+        assert s["requests_finished_total"] == 10
+
+
+class TestTieredThroughput:
+    def test_tiered_admits_strictly_more_within_horizon(self):
+        """Acceptance: under the constrained pool, preempt-and-resume
+        admits strictly more requests inside a fixed step horizon than
+        deferral-only scheduling of the identical trace."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=3, max_len=48)
+        horizon = 15.0
+        admits = {}
+        for name, tiering in (("deferral", None),
+                              ("tiered", TieringConfig(host_kv_pages=32))):
+            sched = ContinuousScheduler(eng, tiering=tiering, **POOL)
+            reqs, arrivals = _overload_trace()
+            for r, at in zip(reqs, arrivals):
+                sched.submit(r, arrival=at)
+            admits[name] = sum(
+                1 for ev in sched.events()
+                if ev[0] == "admit" and ev[-1] <= horizon)
+            for r in reqs:
+                assert r.out == _serial(eng, r)
+            _assert_clean(sched)
+        assert admits["tiered"] > admits["deferral"], admits
+
+
+# ---- host tiers through the runtime ----------------------------------------
+class TestHostTierRuntime:
+    def test_adapter_rows_spill_and_refill_from_host(self, tmp_path):
+        """capacity-1 bank, two tenants arriving serially: the LRU victim
+        spills to the host tier, and the tenant's return admission refills
+        from host (a hit, not a checkpoint re-read) — streams exact."""
+        model, params = _base_model()
+        profiles = _export_tenants(model, tmp_path)
+        bank = AdapterBank(model, profiles, capacity=1,
+                           checkpoint_dir=str(tmp_path))
+        eng = Engine(model, params, batch_slots=2, max_len=48, bank=bank)
+        sched = ContinuousScheduler(
+            eng, page_size=8,
+            tiering=TieringConfig(host_adapter_slots=4, preempt=False))
+        reqs = [_req([1, 2, 3], 4, adapter_id="tenant-fft"),
+                _req([4, 5, 6], 4, adapter_id="tenant-lora"),
+                _req([1, 2, 3], 4, adapter_id="tenant-fft")]
+        sched.serve(reqs, arrivals=[0.0, 30.0, 60.0])
+        s = sched.metrics.summary()
+        assert s["adapter_spills_total"] >= 1
+        assert s["adapter_host_hits_total"] >= 1
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        _assert_clean(sched)
+
+    def test_prefix_pages_demote_to_host_and_promote_back(self):
+        """Cold-prefix eviction demotes pages to the host tier instead of
+        dropping them; a later prompt sharing that prefix promotes them
+        back (fills) and still decodes bit-identically."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=32)
+        sched = ContinuousScheduler(
+            eng, page_size=4, n_pages=10,
+            tiering=TieringConfig(host_kv_pages=16))
+        shared = list(range(1, 10))                      # 2 full chunks
+        reqs = [_req(shared, 4),
+                _req([21, 22, 23, 24, 25], 24, "batch"), # forces eviction
+                _req(shared, 4)]
+        sched.serve(reqs, arrivals=[0.0, 20.0, 60.0])
+        s = sched.metrics.summary()
+        # eviction frees exactly what pressure needs, so only the leaf
+        # chunk demotes; the return of the shared prompt promotes it back
+        assert s["kv_pages_spilled_total"] >= 1
+        assert s["prefix_host_hits_total"] >= 1
+        assert s["kv_pages_filled_total"] >= 1
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        assert reqs[0].out == reqs[2].out
+        _assert_clean(sched)
+
+
+# ---- gateway extension ------------------------------------------------------
+class TestGatewayPriority:
+    def test_parse_request_priority_field(self):
+        from repro.serve.gateway.protocol import ApiError, parse_request
+
+        ok = parse_request("completion",
+                           {"model": "base", "prompt": [1, 2],
+                            "priority": "interactive"},
+                           vocab=64, max_len=64)
+        assert ok.priority == "interactive"
+        default = parse_request("completion",
+                                {"model": "base", "prompt": [1, 2]},
+                                vocab=64, max_len=64)
+        assert default.priority == "batch"
+        with pytest.raises(ApiError, match="priority"):
+            parse_request("completion",
+                          {"model": "base", "prompt": [1], "priority": "x"},
+                          vocab=64, max_len=64)
