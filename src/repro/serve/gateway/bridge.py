@@ -118,6 +118,14 @@ class SchedulerBridge:
         total = pager.n_pages - pager.n_slots
         return pager.allocator.free_count() / max(total, 1)
 
+    def preempting(self) -> bool:
+        """Whether the scheduler can actually evict a victim for blocked
+        high-class work (mirrors the runtime's admission-path gate) — the
+        gateway's interactive backpressure bypass is only sound then."""
+        tiering = getattr(self.sched, "tiering", None)
+        return (tiering is not None and tiering.preempt
+                and getattr(self.sched, "pager", None) is not None)
+
     # ---- pump thread -------------------------------------------------------
     def _post(self, handle: RequestHandle, item) -> None:
         try:

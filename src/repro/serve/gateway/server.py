@@ -238,17 +238,19 @@ class GatewayServer:
     # ---- generation --------------------------------------------------------
     def _overloaded(self, priority: str = "batch") -> bool:
         """Class-aware backpressure (DESIGN.md §Tiering): interactive work
-        gets the full queue watermark and skips the page-frac gate (the
-        tiered scheduler preempts for it rather than queueing it behind
-        pressure); best_effort work is shed at half the watermark so it
-        never crowds out the classes above it."""
+        skips the page-frac gate ONLY when the scheduler can actually
+        preempt for it (otherwise it would just queue behind pressure with
+        overload protection disabled — and `priority` is client-supplied,
+        so the bypass must not outrun what the backend enforces);
+        best_effort work is shed at half the queue watermark so it never
+        crowds out the classes above it."""
         queued = self.bridge.queued()
         watermark = self.max_queue
         if priority == "best_effort":
             watermark = max(1, self.max_queue // 2)
         if queued >= watermark:
             return True
-        if priority == "interactive":
+        if priority == "interactive" and self.bridge.preempting():
             return False
         return (self.min_free_page_frac > 0 and queued > 0
                 and self.bridge.free_page_frac() < self.min_free_page_frac)

@@ -158,14 +158,19 @@ class PrefixCache:
         """Register `page` as the immutable holder of chunk `key` (takes
         one allocator reference); `parent` is the previous chunk's key in
         the chain (None for the first chunk). No-op when the chunk is
-        already cached — the existing page stays canonical."""
+        already cached — the existing page stays canonical.
+
+        The parent link is recorded even when the ancestor is currently
+        absent: chain keys are pure functions of the prefix, so if the
+        ancestor's key is ever (re-)inserted it must immediately count
+        this child — otherwise leaf-first eviction could evict the
+        interior chunk first, stranding the descendant (unreachable —
+        `match` stops at the first miss — yet still holding its page)."""
         if key in self._entries:
             self._entries.move_to_end(key)
             return
         self._alloc.ref(page)
         self._entries[key] = page
-        if parent is not None and parent not in self._entries:
-            parent = None   # orphan: the ancestor already aged out
         self._parent[key] = parent
         if parent is not None:
             self._nkids[parent] = self._nkids.get(parent, 0) + 1

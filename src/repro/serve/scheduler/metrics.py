@@ -74,6 +74,7 @@ class ServingMetrics:
                 "preemptions_total", "preempt_swap_total",
                 "preempt_recompute_total", "resumed_total",
                 "kv_pages_spilled_total", "kv_pages_filled_total",
+                "kv_fills_degraded_total",
                 "prefix_host_hits_total", "adapter_spills_total",
                 "adapter_host_hits_total")
 
@@ -159,6 +160,12 @@ class ServingMetrics:
 
     def on_kv_fill(self, n_pages: int) -> None:
         self.kv_pages_filled_total += n_pages
+
+    def on_kv_fill_degraded(self, n_pages: int) -> None:
+        """Planned host fills that aged out of the pool before the promote
+        (displaced by the same plan's demotions) — recomputed on device
+        instead; the stream stays exact, only the fill saving is lost."""
+        self.kv_fills_degraded_total += n_pages
 
     def on_prefix_host_hit(self, n_pages: int) -> None:
         self.prefix_host_hits_total += n_pages

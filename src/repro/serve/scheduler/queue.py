@@ -48,10 +48,12 @@ class RequestQueue:
                        loads and LRU churn under tenant-heavy traffic);
                        falls back to fcfs order within each class.
       "fair"           per-tenant fair share: within a priority class, the
-                       tenant that has consumed the fewest tokens (fed by
-                       `note_usage` from the runtime's emission path) goes
-                       first, so a chatty tenant cannot starve quiet ones;
-                       falls back to fcfs within a tenant.
+                       tenant that has consumed the fewest RECENT tokens
+                       (fed by `note_usage` from the runtime's emission
+                       path, decayed by periodic halving) goes first, so a
+                       chatty tenant cannot starve quiet ones — but a
+                       historically chatty tenant is not deprioritized
+                       forever; falls back to fcfs within a tenant.
     """
 
     POLICIES = ("fcfs", "resident_first", "fair")
@@ -89,10 +91,24 @@ class RequestQueue:
         bisect.insort(self._pending, sr,
                       key=lambda s: (s.arrival, s.rid))
 
+    # fair-policy decay: once any tenant's counter reaches this, every
+    # counter halves and zeroed tenants drop out — fairness tracks recent
+    # consumption (exponential decay) and the dict stays bounded by the
+    # recently-active tenant set instead of growing per distinct tenant
+    # for the queue's lifetime
+    USAGE_HALF_AT = 1 << 14
+
     def note_usage(self, tenant: Optional[str], n_tokens: int) -> None:
         """Fair-share accounting: `tenant` consumed `n_tokens` more decode
-        tokens (the runtime calls this on emission; None = base model)."""
-        self._usage[tenant] = self._usage.get(tenant, 0) + n_tokens
+        tokens (the runtime calls this on emission; None = base model).
+        Tracked only under the "fair" policy — no other policy reads it."""
+        if self.policy != "fair":
+            return
+        total = self._usage.get(tenant, 0) + n_tokens
+        self._usage[tenant] = total
+        if total >= self.USAGE_HALF_AT:
+            self._usage = {t: n >> 1 for t, n in self._usage.items()
+                           if n >> 1}
 
     def usage(self, tenant: Optional[str]) -> int:
         return self._usage.get(tenant, 0)

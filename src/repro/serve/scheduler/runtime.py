@@ -220,7 +220,9 @@ class ContinuousScheduler:
                 donate_argnums=(0,))
             if tiering.host_kv_pages > 0:
                 self.host_kv = HostPagePool(tiering.host_kv_pages)
-                self.pager.host_has = self.host_kv.has_prefix
+                # touch (not just probe): planned fill keys become MRU so
+                # the same plan's demotions displace older entries first
+                self.pager.host_has = self.host_kv.touch_prefix
                 self.pager.prefix_cache.on_evict = self._demote_prefix_page
         if tiering is not None and tiering.host_adapter_slots > 0 \
                 and self.bank is not None:
@@ -370,19 +372,33 @@ class ContinuousScheduler:
             batch["true_len"] = jnp.full((1,), n, jnp.int32)
         return P, batch
 
-    def _promote_fills(self, plan: PrimePlan) -> None:
+    def _promote_fills(self, plan: PrimePlan, prompt) -> None:
         """Copy the plan's host-matched chunks back into their owned device
         pages before the prime (one batched H2D + scatter; padded rows land
         in the slot's scratch page). The entries stay host-resident — LRU
-        ages them out."""
+        ages them out.
+
+        A fill can vanish between plan and promote: `plan_admit`'s own
+        eviction demotes device prefix pages into the host pool, and when
+        the pool is full those demotions displace its LRU entries — the
+        planner touches its fill keys to MRU, but enough same-plan
+        demotions can still reach them. The chain shares from the front,
+        so everything past the first missing chunk is unusable: truncate
+        the fills there and extend the tail back over the lost chunks —
+        the prime recomputes them into the already-owned pages, keeping
+        the stream exact at a recompute cost."""
         n = len(plan.fills)
         width = _bucket(n, lo=1)
         k = v = idx = None
+        filled = 0
         for i, (c, key) in enumerate(plan.fills):
             hit = self.host_kv.get_prefix(key)
-            if hit is None:     # cannot happen: nothing evicts between the
-                raise RuntimeError(   # same-round plan and this promote
-                    "host prefix entry vanished between plan and prime")
+            if hit is None:
+                self.metrics.on_kv_fill_degraded(n - i)
+                plan.prefix_len = c * self.pager.page_size
+                plan.tail = np.asarray(prompt)[plan.prefix_len:]
+                del plan.fills[i:]
+                break
             hk, hv = hit
             if k is None:
                 k = np.zeros((hk.shape[0], width) + hk.shape[2:], hk.dtype)
@@ -390,10 +406,13 @@ class ContinuousScheduler:
                 idx = np.full((width,), plan.scratch_page, np.int32)
             k[:, i], v[:, i] = hk[:, 0], hv[:, 0]
             idx[i] = plan.block_row[c]
+            filled += 1
+        if not filled:
+            return
         self.cache = self._fill_pages(self.cache, jnp.asarray(k),
                                       jnp.asarray(v), jnp.asarray(idx))
-        self.metrics.on_kv_fill(n)
-        self.metrics.on_prefix_host_hit(n)
+        self.metrics.on_kv_fill(filled)
+        self.metrics.on_prefix_host_hit(filled)
 
     def _prime(self, sr: ScheduledRequest, slot: int,
                prompt=None) -> int:
@@ -417,7 +436,7 @@ class ContinuousScheduler:
             if plan.cow is not None:
                 self.cache = self._copy_page(self.cache, *plan.cow)
             if plan.fills:
-                self._promote_fills(plan)
+                self._promote_fills(plan, prompt)
             _, batch = self._bucketed_prompt(jnp.asarray(plan.tail),
                                              int(plan.tail.shape[0]))
             batch.update(block_table=jnp.asarray(plan.block_row[None]),

@@ -79,6 +79,18 @@ class HostPagePool:
     def has_prefix(self, key: bytes) -> bool:
         return key in self._prefix
 
+    def touch_prefix(self, key: bytes) -> bool:
+        """has_prefix + LRU refresh: the admission planner probes fill
+        candidates through this, so the keys a plan is about to promote
+        become MRU and `_make_room` (fed by the SAME plan's device-side
+        demotions) displaces older entries first. Not a pin — a plan
+        whose demotions exceed the pool can still age its own fills out,
+        which the runtime degrades to recompute."""
+        if key not in self._prefix:
+            return False
+        self._prefix.move_to_end(key)
+        return True
+
     def put_prefix(self, key: bytes, k, v) -> bool:
         """Admit one demoted prefix page (k/v may be in-flight device
         arrays). False when the pool cannot fit it — the page is simply

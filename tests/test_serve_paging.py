@@ -308,6 +308,29 @@ class TestEvictExactlyEnough:
         pager.release(0)
         pager.release(1)
 
+    def test_reinserted_ancestor_relinks_cached_children(self):
+        """Regression: a child inserted while its ancestor is absent must
+        still count toward the ancestor when that key is (re-)inserted —
+        otherwise leaf-first eviction could drop the interior chunk while
+        the descendant stays cached, stranding it (match stops at the
+        first miss) with its page still allocated."""
+        from repro.serve.paging import PrefixCache
+
+        alloc = PageAllocator(6, n_reserved=1)
+        cache = PrefixCache(alloc)
+        pa, pb = alloc.alloc(), alloc.alloc()
+        cache.insert(b"B", pb, parent=b"A")     # ancestor A not cached yet
+        cache.insert(b"A", pa, parent=None)     # ...now (re-)inserted
+        alloc.free(pa)
+        alloc.free(pb)                          # cache is the only holder
+        assert cache.match([b"A", b"B"]) == [pa, pb]   # chain healed; this
+        evicted, shortfall = cache.evict_until_free(   # also makes A LRU-
+            alloc.free_count() + 1)                    # older than B
+        assert (evicted, shortfall) == (1, 0)
+        # the LEAF (B) went, not the LRU-older interior chunk (A): the
+        # chain head must still be matchable
+        assert cache.match([b"A", b"B"]) == [pa]
+
     def test_shortfall_reported_when_everything_is_pinned(self):
         pager = PagedKVCache(n_slots=1, max_len=32, page_size=4, n_pages=9)
         plan = pager.plan_admit(0, np.arange(13), 4)

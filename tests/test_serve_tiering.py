@@ -118,6 +118,26 @@ class TestPriorityQueue:
         q.push(_req([3], 1, "interactive", adapter_id="chatty"), arrival=0.0)
         assert q.peek_next(0.0).request.priority == "interactive"
 
+    def test_usage_tracked_only_under_fair_policy(self):
+        """Non-fair policies never read the usage table, so feeding it
+        would be pure memory growth per distinct tenant — note_usage must
+        be a no-op there."""
+        for policy in ("fcfs", "resident_first"):
+            q = RequestQueue(policy)
+            q.note_usage("tenant", 5)
+            assert q.usage("tenant") == 0 and not q._usage, policy
+
+    def test_fair_usage_decays_and_stays_bounded(self):
+        """Hitting USAGE_HALF_AT halves every counter (fairness tracks
+        RECENT consumption, not lifetime totals) and drops zeroed tenants
+        (the table stays bounded by the recently-active set)."""
+        q = RequestQueue("fair")
+        q.note_usage("quiet", 1)
+        q.note_usage("chatty", q.USAGE_HALF_AT)
+        assert q.usage("chatty") == q.USAGE_HALF_AT // 2
+        assert q.usage("quiet") == 0
+        assert "quiet" not in q._usage
+
     def test_requeue_keeps_rid_and_position(self):
         q = RequestQueue("fcfs")
         r0 = q.push(_req([1], 1), arrival=0.0)
@@ -153,6 +173,19 @@ class TestHostPools:
         assert pool.put_prefix(bytes([9]), *self._page(9))
         assert pool.has_prefix(b"\x01")         # get() refreshed its LRU slot
         assert not pool.has_prefix(b"\x02")
+
+    def test_touch_prefix_refreshes_lru(self):
+        """The admission planner probes fill candidates via touch_prefix:
+        the touched key becomes MRU, so later same-plan demotions displace
+        older entries first."""
+        pool = HostPagePool(capacity_pages=2)
+        assert pool.put_prefix(b"a", *self._page(1))
+        assert pool.put_prefix(b"b", *self._page(2))
+        assert pool.touch_prefix(b"a")
+        assert not pool.touch_prefix(b"nope")
+        assert pool.put_prefix(b"c", *self._page(3))
+        assert pool.has_prefix(b"a")            # refreshed: survived
+        assert not pool.has_prefix(b"b")        # the LRU went instead
 
     def test_snapshots_are_pinned_and_charged(self):
         pool = HostPagePool(capacity_pages=3)
@@ -367,6 +400,35 @@ class TestHostTierRuntime:
         assert reqs[0].out == reqs[2].out
         _assert_clean(sched)
 
+    def test_fill_displaced_by_own_demotions_degrades_exact(self):
+        """Regression: full host pool + device page pressure in ONE
+        admission. plan_admit matches a host-resident chunk (fill), then
+        its own eviction demotes another page into the full host pool,
+        displacing the planned fill before the promote. The prime must
+        degrade that chunk to on-device recompute — stream exact, round
+        not crashed. Sizing: 3 allocatable pages, host pool of 1; req1
+        caches chunks A+B, req2's admission demotes B to host (pool now
+        full) and registers its own chunk C, req3 (same prompt as req1)
+        matches A on device, plans a fill for B, and its eviction of C
+        demotes C — popping B out of the capacity-1 pool."""
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=12)
+        sched = ContinuousScheduler(
+            eng, page_size=4, n_pages=5,
+            tiering=TieringConfig(host_kv_pages=1, preempt=False))
+        shared = list(range(1, 10))                  # chunks A, B
+        reqs = [_req(shared, 4),
+                _req([21, 22, 23, 24, 25], 4),
+                _req(shared, 4)]
+        sched.serve(reqs, arrivals=[0.0, 20.0, 60.0])
+        s = sched.metrics.summary()
+        assert s["kv_fills_degraded_total"] >= 1
+        assert s["kv_pages_spilled_total"] >= 1
+        for r in reqs:
+            assert r.out == _serial(eng, r)
+        assert reqs[0].out == reqs[2].out
+        _assert_clean(sched)
+
 
 # ---- gateway extension ------------------------------------------------------
 class TestGatewayPriority:
@@ -386,3 +448,24 @@ class TestGatewayPriority:
             parse_request("completion",
                           {"model": "base", "prompt": [1], "priority": "x"},
                           vocab=64, max_len=64)
+
+    def test_interactive_bypass_requires_preemption(self):
+        """`priority` is client-supplied: the interactive page-frac bypass
+        must hold only when the scheduler can actually preempt — otherwise
+        self-declared interactive traffic would simply disable overload
+        protection while still queueing behind pressure."""
+        from repro.serve.gateway.server import GatewayServer
+
+        model, params = _base_model()
+        eng = Engine(model, params, batch_slots=2, max_len=32)
+        for tiering, bypass in ((None, False),
+                                (TieringConfig(preempt=False), False),
+                                (TieringConfig(host_kv_pages=4), True)):
+            sched = ContinuousScheduler(eng, page_size=8, tiering=tiering)
+            gw = GatewayServer(sched, min_free_page_frac=0.5)
+            assert gw.bridge.preempting() is bypass
+            gw.bridge.queued = lambda: 1           # simulate pressure:
+            gw.bridge.free_page_frac = lambda: 0.0  # starved pool, work queued
+            assert gw._overloaded("batch")
+            assert gw._overloaded("best_effort")
+            assert gw._overloaded("interactive") is not bypass
