@@ -1,0 +1,140 @@
+"""Sharding-planner fleet validation over the checked-in dry-run baselines.
+
+For every `results/dryrun_baseline_v0` cell (the 64-cell arch x shape x mesh
+sweep) this reconstructs the model abstractly, prices the rules placement
+with the alpha-beta cost model (`dist/planner.score_source`), and compares
+the prediction against the analyzer-measured terms stored in the cell JSON —
+the calibration check for the planner: costs don't need to be exact, they
+need to RANK cells the way the HLO analyzer does. The Spearman rank
+correlations (total + collective) land as `sharding_plan_*` rows in
+``BENCH_analysis.json`` so calibration drift is machine-diffable across PRs.
+
+Each cell also gets a searched plan (`dist/planner.plan_model`) written to
+``results/sharding_plans_v0/<cell>.plan.json`` with the rules-vs-search
+ranking, the spec diff against the rules, and the measured terms inlined —
+the promotion artifact DESIGN.md §Sharding describes. Nothing compiles:
+everything here runs on eval_shape trees, so the whole fleet sweep is
+seconds, not hours.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINES = ROOT / "results" / "dryrun_baseline_v0"
+PLANS_OUT = ROOT / "results" / "sharding_plans_v0"
+
+
+def _rank(v: np.ndarray) -> np.ndarray:
+    """Average ranks (ties share the mean rank) — no scipy in the image."""
+    v = np.asarray(v, dtype=float)
+    order = np.argsort(v, kind="mergesort")
+    ranks = np.empty(len(v), dtype=float)
+    sv = v[order]
+    i, n = 0, len(v)
+    while i < n:
+        j = i
+        while j + 1 < n and sv[j + 1] == sv[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0
+        i = j + 1
+    return ranks
+
+
+def spearman(x, y) -> float:
+    rx, ry = _rank(x), _rank(y)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = float(np.sqrt((rx * rx).sum() * (ry * ry).sum()))
+    return float((rx * ry).sum() / denom) if denom else 0.0
+
+
+def _measured_total(rec: dict) -> float:
+    t = rec["terms"]
+    # same convention as PlanCost.total_s: overlap-free compute/memory max
+    # plus serial collectives
+    return max(t["compute_s"], t["memory_s"]) + t["collective_s"]
+
+
+def main():
+    import repro.configs as configs
+    from repro.dist import plan as plan_mod
+    from repro.dist import planner
+    from repro.dist.cost_model import MeshSpec
+    from repro.launch.dryrun_lib import peft_for
+    from repro.models import build
+
+    cells = sorted(BASELINES.glob("*.json"))
+    if not cells:
+        emit("sharding_plan_fleet", 0.0, "cells=0;skipped=no-baselines")
+        return
+    PLANS_OUT.mkdir(parents=True, exist_ok=True)
+
+    pred_total, meas_total = [], []
+    pred_coll, meas_coll = [], []
+    search_beats = search_ties = 0
+    diff_cells = 0
+    t0 = time.perf_counter()
+    built = {}
+    for path in cells:
+        rec = json.loads(path.read_text())
+        arch, kind = rec["arch"], rec["kind"]
+        shape = configs.shape_for(rec["shape"])
+        mesh = MeshSpec.from_string(rec["mesh"])
+        key = (arch, "train" if kind == "train" else "serve")
+        if key not in built:
+            cfg = configs.get(arch)
+            built[key] = build(cfg, peft_for(cfg, key[1]), remat="none")
+        model = built[key]
+
+        rules = plan_mod.RulesSource()
+        rules_cost = planner.score_source(model, mesh, shape, rules,
+                                          workload=kind)
+        pred_total.append(rules_cost.total_s)
+        meas_total.append(_measured_total(rec))
+        pred_coll.append(rules_cost.collective_bytes)
+        meas_coll.append(rec["collective_bytes_per_device"])
+
+        plan = planner.plan_model(model, mesh, shape=shape, workload=kind)
+        ranked = plan.meta.get("ranked", [])
+        rules_obj = next((r["objective_s"] for r in ranked
+                          if r["strategy"] == "rules"), None)
+        best_obj = ranked[0]["objective_s"] if ranked else None
+        if rules_obj is not None and best_obj is not None:
+            if best_obj < rules_obj * (1 - 1e-9):
+                search_beats += 1
+            else:
+                search_ties += 1
+        diffs = planner.spec_diff(rules, plan_mod.PlanTableSource(plan),
+                                  model, mesh, model.cfg, shape, kind)
+        if diffs:
+            diff_cells += 1
+        plan.meta["validation"] = {
+            "cell": path.stem,
+            "measured_terms": rec["terms"],
+            "measured_collective_bytes": rec["collective_bytes_per_device"],
+            "rules_predicted": rules_cost.to_json(),
+            "spec_diffs_vs_rules": len(diffs),
+        }
+        plan.save(str(PLANS_OUT / f"{path.stem}.plan.json"))
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    rho_total = spearman(pred_total, meas_total)
+    rho_coll = spearman(pred_coll, meas_coll)
+    n = len(cells)
+    emit("sharding_plan_fleet", wall_us / n,
+         f"cells={n};spearman_total={rho_total:.4f};"
+         f"spearman_collective={rho_coll:.4f}")
+    emit("sharding_plan_search", wall_us / n,
+         f"cells={n};search_beats_rules={search_beats};"
+         f"search_ties_rules={search_ties};spec_diff_cells={diff_cells}")
+
+
+if __name__ == "__main__":
+    main()

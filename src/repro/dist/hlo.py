@@ -21,7 +21,13 @@ Byte accounting reports two bounds (DESIGN.md §9):
   custom-call) touch HBM; elementwise chains are assumed fully fused.
 
 Collective traffic is the output size of each collective × multiplicity,
-broken down by kind in `bytes_by_kind` / `count_by_kind`.
+broken down by kind in `bytes_by_kind` / `count_by_kind` — all-to-all and
+collective-permute get their own buckets, never lumped into a generic
+"collective" bin (the planner's cost model prices each kind differently).
+`group_by_kind` additionally records the largest replica-group size seen per
+kind (both `{{0,1},…}` literal and `[G,S]<=[N]` iota forms; permute pairs
+count as groups of 2), which is what calibrates the cost model's
+chunk-factor n against compiled reality.
 """
 from __future__ import annotations
 
@@ -123,6 +129,28 @@ class ModuleStats:
     collective_bytes: float = 0.0
     bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
     count_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    group_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def replica_group_size(attrs: str) -> Optional[int]:
+    """Replica-group size of a collective from its attrs. Handles the
+    literal form `replica_groups={{0,1},{2,3}}` (size = first group's
+    length), the iota form `replica_groups=[G,S]<=[N]` (size = S), and
+    collective-permute's `source_target_pairs` (pairwise: 2)."""
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LITERAL_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    if _PERMUTE_PAIRS_RE.search(attrs):
+        return 2
+    return None
 
 
 def _split_shape(rest: str) -> Tuple[str, str]:
@@ -297,6 +325,10 @@ def _walk(comp: str, mult: float, comps: Dict[str, List[Instr]],
                                          + mult * out_b)
             stats.count_by_kind[kind] = (stats.count_by_kind.get(kind, 0)
                                          + int(round(mult)))
+            gs = replica_group_size(ins.attrs)
+            if gs is not None:
+                stats.group_by_kind[kind] = max(
+                    stats.group_by_kind.get(kind, 0), gs)
             stats.bytes += mult * (out_b + _operand_bytes(ins, table))
             stats.bytes_min += mult * out_b
             continue

@@ -203,6 +203,47 @@ def state_specs(tree, mesh: Mesh, cfg: ModelConfig, fsdp: bool = False):
     return _walk_specs(tree, rule)
 
 
+# Batch leaves with an explicitly decided placement (batch_rule_kind).
+# Everything here rides the batch axes on dim 0 unless batch_leaf_spec
+# special-cases it; a batch leaf NOT named here falls through and the
+# sharding-coverage audit flags it.
+_BATCH_LEAVES = {
+    "tokens", "labels", "embeds", "positions", "block_table",
+    "adapter_slots", "true_len", "prefix_len", "slot",
+    "scratch_page", "scratch_pages",
+}
+
+
+def batch_leaf_spec(path: str, shp: Tuple[int, ...], b) -> P:
+    """Spec for one input-batch leaf given the chosen batch axes `b`
+    (an axis tuple, or None to replicate the batch dim)."""
+    nd = len(shp)
+    if not nd:
+        return P()
+    name = path.split("/")[-1]
+    if name == "positions" and nd == 3:
+        return P(None, b, *([None] * (nd - 2)))
+    if name == "block_table":
+        # (B, pages_per_seq) slot->page map rides the batch axes; the
+        # (pages_per_seq,) prefill-time row replicates
+        return P(b, None) if nd == 2 else P(*([None] * nd))
+    return P(b, *([None] * (nd - 1)))
+
+
+def batch_rule_kind(path: str, shape: Tuple[int, ...]) -> Optional[str]:
+    """Coverage classifier for input-batch leaves (mirrors `rule_kind` for
+    params): "batch" | "replicate" | "scalar" for decided names, None for a
+    leaf nobody placed."""
+    name = path.split("/")[-1]
+    if not shape:
+        return "scalar"
+    if name == "block_table" and len(shape) != 2:
+        return "replicate"
+    if name in _BATCH_LEAVES:
+        return "batch"
+    return None
+
+
 def batch_specs(batch: Dict, mesh: Mesh, shape: ShapeConfig):
     """Input batches shard their batch dim over (pod, data). The vlm
     `positions` leaf is (3, B, S) — batch lives on dim 1."""
@@ -210,18 +251,60 @@ def batch_specs(batch: Dict, mesh: Mesh, shape: ShapeConfig):
     b = bax if bax else None
 
     def rule(path, leaf):
-        nd = len(getattr(leaf, "shape", ()))
-        if not nd:
-            return P()
-        name = path.split("/")[-1]
-        if name == "positions" and nd == 3:
-            return P(None, b, *([None] * (nd - 2)))
-        if name == "block_table":
-            # (B, pages_per_seq) slot->page map rides the batch axes; the
-            # (pages_per_seq,) prefill-time row replicates
-            return P(b, None) if nd == 2 else P(*([None] * nd))
-        return P(b, *([None] * (nd - 1)))
+        return batch_leaf_spec(path, tuple(getattr(leaf, "shape", ())), b)
     return _walk_specs(batch, rule)
+
+
+def cache_leaf_spec(path: str, shp: Tuple[int, ...], mesh: Mesh, b) -> P:
+    """Spec for one decode-cache leaf given the chosen batch axes `b`."""
+    nd = len(shp)
+    name = path.split("/")[-1]
+    if nd == 5 and name in ("pk", "pv"):
+        # paged page pool (L, n_pages, page_size, K, hd): pages are a
+        # GLOBAL pool shared by every slot (block tables map slots onto
+        # them), so the page dim replicates — only the KV-head dim
+        # follows the projection sharding like the dense cache
+        return P(None, None, None, _maybe(shp[3], mesh, "model"), None)
+    if nd >= 4 and name in ("k", "v", "attn_k", "attn_v"):
+        return P(None, b, None, _maybe(shp[3], mesh, "model"),
+                 *([None] * (nd - 4)))
+    if name == "conv" and nd == 4:
+        return P(None, b, None, _maybe(shp[3], mesh, "model"))
+    if name == "ssm" and nd == 5:
+        return P(None, b, _maybe(shp[2], mesh, "model"), None, None)
+    if name == "pos" and nd == 1:
+        # per-slot position vector of the persistent continuous-batching
+        # cache: (B,) — rides the batch axes like the rows it indexes
+        return P(b)
+    if nd >= 2:
+        return P(None, b, *([None] * (nd - 2)))
+    return P()
+
+
+# Cache leaves with a decided placement: attention KV (dense + paged +
+# hybrid), SSM conv window / state, and the per-slot position vector.
+_CACHE_LEAVES = {"k", "v", "attn_k", "attn_v", "pk", "pv", "conv", "ssm",
+                 "pos"}
+
+
+def cache_rule_kind(path: str, shape: Tuple[int, ...]) -> Optional[str]:
+    """Coverage classifier for decode-cache leaves: which named cache rule
+    places this leaf, or None when it would ride the generic batch-dim-1
+    fall-through nobody decided."""
+    name = path.split("/")[-1]
+    if not shape:
+        return "scalar"
+    if name in ("pk", "pv"):
+        return "paged-pool" if len(shape) == 5 else None
+    if name in ("k", "v", "attn_k", "attn_v"):
+        return "kv" if len(shape) >= 4 else None
+    if name == "conv":
+        return "conv" if len(shape) == 4 else None
+    if name == "ssm":
+        return "ssm" if len(shape) == 5 else None
+    if name == "pos":
+        return "slot-pos" if len(shape) <= 1 else None
+    return None
 
 
 def cache_specs(cache: Dict, mesh: Mesh, cfg: ModelConfig,
@@ -233,29 +316,8 @@ def cache_specs(cache: Dict, mesh: Mesh, cfg: ModelConfig,
     b = bax if bax else None
 
     def rule(path, leaf):
-        shp = tuple(getattr(leaf, "shape", ()))
-        nd = len(shp)
-        name = path.split("/")[-1]
-        if nd == 5 and name in ("pk", "pv"):
-            # paged page pool (L, n_pages, page_size, K, hd): pages are a
-            # GLOBAL pool shared by every slot (block tables map slots onto
-            # them), so the page dim replicates — only the KV-head dim
-            # follows the projection sharding like the dense cache
-            return P(None, None, None, _maybe(shp[3], mesh, "model"), None)
-        if nd >= 4 and name in ("k", "v", "attn_k", "attn_v"):
-            return P(None, b, None, _maybe(shp[3], mesh, "model"),
-                     *([None] * (nd - 4)))
-        if name == "conv" and nd == 4:
-            return P(None, b, None, _maybe(shp[3], mesh, "model"))
-        if name == "ssm" and nd == 5:
-            return P(None, b, _maybe(shp[2], mesh, "model"), None, None)
-        if name == "pos" and nd == 1:
-            # per-slot position vector of the persistent continuous-batching
-            # cache: (B,) — rides the batch axes like the rows it indexes
-            return P(b)
-        if nd >= 2:
-            return P(None, b, *([None] * (nd - 2)))
-        return P()
+        return cache_leaf_spec(path, tuple(getattr(leaf, "shape", ())),
+                               mesh, b)
     return _walk_specs(cache, rule)
 
 

@@ -74,6 +74,10 @@ def add_model_args(ap: argparse.ArgumentParser) -> None:
                     help="host-RAM adapter tier rows (0 disables): bank "
                          "evictions spill here; admission refills without "
                          "re-reading the checkpoint")
+    ap.add_argument("--sharding-plan", default="rules",
+                    help="rules|search|<plan.json>: where placements come "
+                         "from (dist/plan.py); search runs the planner once "
+                         "at startup")
 
 
 def _model_cfg(args):
@@ -150,7 +154,8 @@ def build_scheduler(args):
                 print(f"skipping tenant {tid!r}: {e}")
 
     engine = Engine(model, params, batch_slots=args.slots,
-                    max_len=args.max_len, mesh=mesh, bank=bank)
+                    max_len=args.max_len, mesh=mesh, bank=bank,
+                    plan=args.sharding_plan)
     drafter = None
     if args.speculative:
         drafter = (SelfDrafter(k=args.draft_k) if args.drafter == "self"

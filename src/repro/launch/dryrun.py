@@ -33,6 +33,9 @@ def parse_args(argv=None):
     ap.add_argument("--mesh-shape", type=str, default=None,
                     help="perf-variant mesh remap, e.g. 64x4")
     ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--sharding-plan", type=str, default="rules",
+                    help="rules|search|<plan.json>: plan source for every "
+                         "tree of the cell (dist/plan.py)")
     ap.add_argument("--force", action="store_true",
                     help="re-run cells that already have a result JSON")
     return ap.parse_args(argv)
@@ -74,6 +77,8 @@ def main(argv=None):
                            "--remat", args.remat]
                     if args.microbatch is not None:
                         cmd += ["--microbatch", str(args.microbatch)]
+                    if args.sharding_plan != "rules":
+                        cmd += ["--sharding-plan", args.sharding_plan]
                     if args.save_hlo:
                         cmd += ["--save-hlo"]
                     print(f"RUN  {arch} {shape.name} {mname} ...", flush=True)
@@ -93,7 +98,8 @@ def main(argv=None):
         res = dryrun_lib.run_cell(
             args.arch, args.shape, multi, args.out, variant=args.variant,
             remat=args.remat, microbatch=args.microbatch,
-            mesh_shape=args.mesh_shape, save_hlo=args.save_hlo)
+            mesh_shape=args.mesh_shape, save_hlo=args.save_hlo,
+            sharding_plan=args.sharding_plan)
         print(json.dumps(
             {k: res[k] for k in ("arch", "shape", "mesh", "terms", "dominant",
                                  "roofline_fraction", "useful_flops_ratio")},

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 import repro.configs as configs
 from repro.configs.base import ModelConfig, PEFTConfig, ShapeConfig, TrainConfig
 from repro.dist import hlo as hlo_mod
+from repro.dist import plan as plan_mod
 from repro.dist import sharding as shd
 from repro.dist.sharding import axis_size
 from repro.models.registry import Model, build
@@ -57,10 +58,28 @@ def auto_microbatch(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
     return 0 if k == 1 else k
 
 
-def make_constrain(mesh: Mesh, cfg: ModelConfig, fsdp: bool = False):
+def _strip_axis(spec: P, axis: str) -> P:
+    """Drop one mesh axis from a PartitionSpec (the gathered copy of an
+    fsdp-scattered weight loses its `data` shard)."""
+    out = []
+    for e in tuple(spec):
+        if e == axis:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != axis)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def make_constrain(mesh: Mesh, cfg: ModelConfig, fsdp: bool = False,
+                   source: Optional[plan_mod.PlanSource] = None):
     """Sharding-constraint hook: (a) merged ΔW stacks pinned to the weight's
-    storage spec; (b) under FSDP, per-layer weight slices gathered over `data`
+    storage spec (whatever the resolved plan `source` chose — rules when
+    None); (b) under FSDP, per-layer weight slices gathered over `data`
     inside the layer loop ("fsdp_gather/<name>" paths)."""
+    source = source or plan_mod.RulesSource()
     # sequence-parallel residual stream: shard S over `model` at layer
     # boundaries for large-d archs. The remat boundary saves (L, B_mb, S, d)
     # then shard 16x (qwen2-vl-72b: 5.4GB -> 0.34GB per stack per device);
@@ -99,10 +118,11 @@ def make_constrain(mesh: Mesh, cfg: ModelConfig, fsdp: bool = False):
         elif path.startswith("fsdp_gather/"):
             if not fsdp:
                 return x
-            spec = shd._param_rule(path[len("fsdp_gather/"):], x.shape, mesh,
-                                   cfg, fsdp=False)
+            spec = _strip_axis(
+                source.param_spec(path[len("fsdp_gather/"):], x.shape, mesh,
+                                  cfg, fsdp=False), "data")
         else:
-            spec = shd._param_rule(path, x.shape, mesh, cfg, fsdp=fsdp)
+            spec = source.param_spec(path, x.shape, mesh, cfg, fsdp=fsdp)
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     return constrain
 
@@ -134,22 +154,30 @@ class Cell:
     args: Tuple            # abstract args (ShapeDtypeStruct trees)
     in_shardings: Tuple
     donate: Tuple[int, ...]
+    plan_source: Optional[plan_mod.PlanSource] = None
 
 
 def build_cell(arch: str, shape_name: str, mesh: Mesh,
                *, peft: Optional[PEFTConfig] = None,
                remat: str = "full",
-               microbatch: Optional[int] = None) -> Cell:
+               microbatch: Optional[int] = None,
+               sharding_plan: Optional[str] = None) -> Cell:
+    """sharding_plan: rules|search|<plan.json> (or an already-resolved
+    PlanSource) — which source places every tree of this cell."""
     cfg = configs.get(arch)
     shape = configs.shape_for(shape_name)
     fsdp = shd.fsdp_default(cfg, mesh)
     if long_context_skip(cfg, shape):
         raise ValueError(f"{arch} skips {shape_name} (full attention; see "
                          "DESIGN.md §Arch-applicability)")
+    workload = shape.kind if shape.kind != "train" else "train"
     if shape.kind == "train":
         p = peft or peft_for(cfg, "train")
         model = build(cfg, p, remat=remat)
-        model.constrain = make_constrain(mesh, cfg, fsdp)
+        src = (sharding_plan if isinstance(sharding_plan, plan_mod.PlanSource)
+               else plan_mod.resolve(sharding_plan, model=model, mesh=mesh,
+                                     shape=shape, workload=workload))
+        model.constrain = make_constrain(mesh, cfg, fsdp, source=src)
         tcfg = TrainConfig(microbatch=(auto_microbatch(cfg, shape, mesh)
                                        if microbatch is None else microbatch))
         tstep = train_step_mod.make_train_step(model, tcfg)
@@ -157,42 +185,41 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh,
             lambda: train_step_mod.init_state(model, tcfg,
                                               jax.random.PRNGKey(0)))
         batch = model.input_specs(shape)
-        state_sh = shd.named(state, shd.state_specs(state, mesh, cfg, fsdp), mesh)
-        frozen_sh = shd.named(frozen, shd.state_specs(frozen, mesh, cfg, fsdp), mesh)
-        batch_sh = shd.named(batch, shd.batch_specs(batch, mesh, shape), mesh)
+        state_sh = shd.named(state, src.state_specs(state, mesh, cfg, fsdp), mesh)
+        frozen_sh = shd.named(frozen, src.state_specs(frozen, mesh, cfg, fsdp), mesh)
+        batch_sh = shd.named(batch, src.batch_specs(batch, mesh, shape), mesh)
         return Cell(arch, shape, model, tstep, (state, frozen, batch),
-                    (state_sh, frozen_sh, batch_sh), (0,))
+                    (state_sh, frozen_sh, batch_sh), (0,), src)
+    p = peft or peft_for(cfg, "serve")
+    model = build(cfg, p, remat="none")
+    src = (sharding_plan if isinstance(sharding_plan, plan_mod.PlanSource)
+           else plan_mod.resolve(sharding_plan, model=model, mesh=mesh,
+                                 shape=shape, workload=workload))
+    model.constrain = make_constrain(mesh, cfg, fsdp, source=src)
     if shape.kind == "prefill":
-        p = peft or peft_for(cfg, "serve")
-        model = build(cfg, p, remat="none")
-        model.constrain = make_constrain(mesh, cfg, fsdp)
-
         def prefill_step(params, batch):
             logits, _ = model.forward(params, batch)
             return logits[:, -1].astype(jnp.float32)
 
         params = model.init_shapes()
         batch = model.input_specs(shape)
-        params_sh = shd.named(params, shd.state_specs(params, mesh, cfg, fsdp), mesh)
-        batch_sh = shd.named(batch, shd.batch_specs(batch, mesh, shape), mesh)
+        params_sh = shd.named(params, src.state_specs(params, mesh, cfg, fsdp), mesh)
+        batch_sh = shd.named(batch, src.batch_specs(batch, mesh, shape), mesh)
         return Cell(arch, shape, model, prefill_step, (params, batch),
-                    (params_sh, batch_sh), ())
-    # decode
-    p = peft or peft_for(cfg, "serve")
-    model = build(cfg, p, remat="none")
-    model.constrain = make_constrain(mesh, cfg, fsdp)
+                    (params_sh, batch_sh), (), src)
 
+    # decode
     def serve_step(params, cache, batch):
         return model.decode_step(params, cache, batch)
 
     params = model.init_shapes()
     cache = model.cache_specs(shape)
     batch = model.input_specs(shape)
-    params_sh = shd.named(params, shd.state_specs(params, mesh, cfg, fsdp), mesh)
-    cache_sh = shd.named(cache, shd.cache_specs(cache, mesh, cfg, shape), mesh)
-    batch_sh = shd.named(batch, shd.batch_specs(batch, mesh, shape), mesh)
+    params_sh = shd.named(params, src.state_specs(params, mesh, cfg, fsdp), mesh)
+    cache_sh = shd.named(cache, src.cache_specs(cache, mesh, cfg, shape), mesh)
+    batch_sh = shd.named(batch, src.batch_specs(batch, mesh, shape), mesh)
     return Cell(arch, shape, model, serve_step, (params, cache, batch),
-                (params_sh, cache_sh, batch_sh), (1,))
+                (params_sh, cache_sh, batch_sh), (1,), src)
 
 
 def lower_cell(cell: Cell):
@@ -287,6 +314,18 @@ def analyze(cell: Cell, lowered, compiled, mesh: Mesh,
 
     peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
             + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    # provenance + predicted cost of whichever plan source placed this cell
+    # (what BENCH_analysis.json's sharding_plan_* rows correlate against the
+    # analyzer terms above)
+    plan_info = None
+    if cell.plan_source is not None:
+        plan_info = dict(cell.plan_source.describe())
+        try:
+            from repro.dist import planner
+            plan_info["predicted"] = planner.score_source(
+                cell.model, mesh, cell.shape, cell.plan_source).to_json()
+        except Exception as e:               # prediction must never sink a run
+            plan_info["predicted_error"] = f"{type(e).__name__}: {e}"
     return {
         "arch": cell.arch,
         "shape": cell.shape.name,
@@ -318,6 +357,7 @@ def analyze(cell: Cell, lowered, compiled, mesh: Mesh,
             "fits_hbm": bool(peak < HBM_BYTES),
         },
         "compile_seconds": compile_seconds,
+        "sharding_plan": plan_info,
     }
 
 
@@ -328,9 +368,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              remat: str = "full",
              microbatch: Optional[int] = None,
              mesh_shape: Optional[str] = None,
-             save_hlo: bool = False) -> Dict:
+             save_hlo: bool = False,
+             sharding_plan: Optional[str] = None) -> Dict:
     """mesh_shape: optional "DxM" remap of the same chips (perf variants);
-    the required dry-run meshes stay (16,16) / (2,16,16)."""
+    the required dry-run meshes stay (16,16) / (2,16,16).
+    sharding_plan: rules|search|<plan.json> — plan source for every tree."""
     from repro.launch.mesh import (
         make_mesh, make_production_mesh, parse_mesh_shape)
     if mesh_shape:
@@ -339,7 +381,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     cell = build_cell(arch, shape_name, mesh, peft=peft, remat=remat,
-                      microbatch=microbatch)
+                      microbatch=microbatch, sharding_plan=sharding_plan)
     t0 = time.time()
     with mesh:
         lowered = lower_cell(cell)

@@ -99,6 +99,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP axis size; remaining devices replicate/batch")
+    ap.add_argument("--sharding-plan", default="rules",
+                    help="rules|search|<plan.json>: where placements come "
+                         "from (dist/plan.py); search runs the planner once "
+                         "at startup")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -150,7 +154,7 @@ def main(argv=None):
 
     slots = max(2, len(tenant_ids)) if bank else 2
     engine = Engine(model, params, batch_slots=slots, max_len=args.max_len,
-                    mesh=mesh, bank=bank)
+                    mesh=mesh, bank=bank, plan=args.sharding_plan)
     prompts = [(jnp.arange(4 + i, dtype=jnp.int32) + 3 * i) % cfg.vocab
                for i in range(slots)]
     if cfg.n_codebooks:

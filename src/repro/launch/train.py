@@ -17,9 +17,10 @@ import argparse
 import jax
 
 import repro.configs as configs
-from repro.configs.base import PEFTConfig, TrainConfig
+from repro.configs.base import PEFTConfig, ShapeConfig, TrainConfig
 from repro.core import adapter as adapter_api
 from repro.data import SyntheticLM
+from repro.dist import plan as plan_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.train import loop, step as train_step
@@ -56,6 +57,10 @@ def main(argv=None):
                          "auto per dist.sharding.fsdp_default")
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
+    ap.add_argument("--sharding-plan", default="rules",
+                    help="rules|search|<plan.json>: where placements come "
+                         "from (dist/plan.py); search runs the planner once "
+                         "at startup")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -80,11 +85,17 @@ def main(argv=None):
     data = SyntheticLM(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
                        seed=args.seed, task_seed=args.task_seed,
                        codebooks=cfg.n_codebooks)
+    plan_src = plan_mod.resolve(
+        args.sharding_plan, model=model, mesh=mesh,
+        shape=ShapeConfig("runtime", args.seq, args.batch, "train"),
+        workload="train")
+    if plan_src.kind != "rules":
+        print(f"sharding plan: {plan_src.describe()}")
     state, frozen, state_sh, frozen_sh = train_step.shard_train_state(
-        model, state, frozen, mesh, fsdp=fsdp)
+        model, state, frozen, mesh, fsdp=fsdp, plan=plan_src)
     step_fn, batch_sh = train_step.make_sharded_train_step(
         model, tcfg, mesh, state, frozen, data.batch_at(0),
-        shardings=(state_sh, frozen_sh))
+        shardings=(state_sh, frozen_sh), plan=plan_src)
     state, report = loop.run(
         step_fn, state, frozen, data, tcfg, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,

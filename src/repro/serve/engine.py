@@ -359,7 +359,7 @@ class Engine:
 
     def __init__(self, model: Model, params: Dict, batch_slots: int,
                  max_len: int, merge: bool = True, mesh=None,
-                 bank: Optional[AdapterBank] = None):
+                 bank: Optional[AdapterBank] = None, plan=None):
         if merge:
             model, params = merge_for_serving(model, params)
         self.bank = bank
@@ -369,9 +369,20 @@ class Engine:
             model = dataclasses.replace(model,
                                         bank_profiles=dict(bank.profiles))
         self.mesh = mesh
+        # plan: a dist.plan.PlanSource (or a --sharding-plan string); the
+        # rules source reproduces the pre-PR-10 placements byte-identically
+        from repro.dist import plan as plan_mod
+        if plan is None or isinstance(plan, str):
+            shape = ShapeConfig("serve", max_len, batch_slots, "decode")
+            self.plan_source = plan_mod.resolve(plan, model=model, mesh=mesh,
+                                                shape=shape,
+                                                workload="decode")
+        else:
+            self.plan_source = plan
         if mesh is not None:
             from repro.dist import sharding as shd
-            specs = shd.state_specs(params, mesh, model.cfg, False)
+            specs = self.plan_source.state_specs(params, mesh, model.cfg,
+                                                 False)
             params = jax.device_put(params, shd.named(params, specs, mesh))
         self.model, self.params = model, params
         self.batch = batch_slots
@@ -402,7 +413,8 @@ class Engine:
         if self.mesh is not None:
             from repro.dist import sharding as shd
             shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
-            specs = shd.cache_specs(cache, self.mesh, self.model.cfg, shape)
+            specs = self.plan_source.cache_specs(cache, self.mesh,
+                                                 self.model.cfg, shape)
             cache = jax.device_put(cache, shd.named(cache, specs, self.mesh))
         return cache
 

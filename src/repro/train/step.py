@@ -164,52 +164,66 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Mesh placement (dist/sharding.py rules)
+# Mesh placement (dist/plan.py sources; rules remain the default)
 # ---------------------------------------------------------------------------
 
+def _plan_source(plan):
+    from repro.dist import plan as plan_mod
+    if plan is None or isinstance(plan, plan_mod.PlanSource):
+        return plan or plan_mod.RulesSource()
+    # a ShardingPlan object or a plan-file path
+    if isinstance(plan, str):
+        return plan_mod.PlanTableSource(plan_mod.ShardingPlan.load(plan))
+    return plan_mod.PlanTableSource(plan)
+
+
 def shard_train_state(model: Model, state: Dict, frozen: Dict, mesh,
-                      fsdp: bool = None):
-    """Place (state, frozen) on `mesh` per the dist sharding rules.
+                      fsdp: bool = None, plan=None):
+    """Place (state, frozen) on `mesh` per the resolved plan source
+    (`plan`: None/rules | PlanSource | ShardingPlan | plan-file path).
     Returns (state, frozen, state_sharding, frozen_sharding)."""
     from repro.dist import sharding as shd
+    src = _plan_source(plan)
     if fsdp is None:
         fsdp = shd.fsdp_default(model.cfg, mesh)
-    st_sh = shd.named(state, shd.state_specs(state, mesh, model.cfg, fsdp),
-                      mesh)
-    fr_sh = shd.named(frozen, shd.state_specs(frozen, mesh, model.cfg, fsdp),
-                      mesh)
+    st_sh = shd.named(state,
+                      src.state_specs(state, mesh, model.cfg, fsdp), mesh)
+    fr_sh = shd.named(frozen,
+                      src.state_specs(frozen, mesh, model.cfg, fsdp), mesh)
     return (jax.device_put(state, st_sh), jax.device_put(frozen, fr_sh),
             st_sh, fr_sh)
 
 
 def make_sharded_train_step(model: Model, tcfg: TrainConfig, mesh,
                             state: Dict, frozen: Dict, batch_example: Dict,
-                            fsdp: bool = None, shardings=None):
+                            fsdp: bool = None, shardings=None, plan=None):
     """jit the train step with explicit mesh shardings and donated state.
     `batch_example` may be real arrays or ShapeDtypeStructs; its leading dim
     is the global batch. `shardings`: the (state_sharding, frozen_sharding)
     pair from shard_train_state — pass it so placement and jit in_shardings
-    share one source of truth (recomputed from `fsdp` only when absent).
-    Returns (jitted_step, batch_sharding) — feed batches through
+    share one source of truth (recomputed from `fsdp`/`plan` only when
+    absent). Returns (jitted_step, batch_sharding) — feed batches through
     `jax.device_put(batch, batch_sharding)` (train/loop.py does this when
     given `batch_sharding`)."""
     from repro.configs.base import ShapeConfig
     from repro.dist import sharding as shd
+    src = _plan_source(plan)
     if shardings is not None:
         st_sh, fr_sh = shardings
     else:
         if fsdp is None:
             fsdp = shd.fsdp_default(model.cfg, mesh)
         st_sh = shd.named(state,
-                          shd.state_specs(state, mesh, model.cfg, fsdp), mesh)
+                          src.state_specs(state, mesh, model.cfg, fsdp),
+                          mesh)
         fr_sh = shd.named(frozen,
-                          shd.state_specs(frozen, mesh, model.cfg, fsdp),
+                          src.state_specs(frozen, mesh, model.cfg, fsdp),
                           mesh)
     ref = batch_example.get("tokens", batch_example.get("embeds"))
     shape = ShapeConfig("runtime", int(ref.shape[1]), int(ref.shape[0]),
                         "train")
     b_sh = shd.named(batch_example,
-                     shd.batch_specs(batch_example, mesh, shape), mesh)
+                     src.batch_specs(batch_example, mesh, shape), mesh)
     step = make_train_step(model, tcfg)
     jitted = jax.jit(step, in_shardings=(st_sh, fr_sh, b_sh),
                      donate_argnums=(0,))
